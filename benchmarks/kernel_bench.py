@@ -1,0 +1,66 @@
+"""Kernel-level benchmarks: Pallas kernels vs jnp oracles (interpret mode
+on CPU — wall times here validate plumbing; real perf numbers come from
+the dry-run roofline, since Mosaic doesn't run on CPU).
+
+Derived column reports the structural perf model per kernel: HBM bytes
+moved and arithmetic ops, the quantities the kernel is designed around.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    # lif_fused: (T,B,N) = paper network hidden layer
+    T, B, N = 25, 8, 512
+    cur = jnp.asarray(rng.normal(0, 0.7, (T, B, N)).astype(np.float32))
+    beta = jnp.asarray(rng.uniform(0.6, 0.95, N).astype(np.float32))
+    thr = jnp.ones((N,), jnp.float32)
+    us_k = time_fn(
+        lambda c: ops.lif_fused(c, beta, thr)[0], cur, warmup=1, iters=3
+    )
+    us_r = time_fn(lambda c: ref.lif_fused_ref(c, beta, thr)[0], cur)
+    hbm = T * B * N * 4 * 2  # in once + out once (fused)
+    hbm_unfused = T * B * N * 4 * 2 + T * B * N * 4 * 2  # + U roundtrips
+    emit(
+        "kernels/lif_fused_25x8x512", us_k,
+        f"ref_us={us_r:.0f};hbm_bytes_fused={hbm};"
+        f"hbm_bytes_stepwise={hbm_unfused};mode=interpret",
+    )
+
+    # spike_matmul: hidden layer integration at 10% spike rate
+    M, K, Nn = 200, 4096, 512
+    spk = jnp.asarray((rng.random((M, K)) < 0.1).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-(2**15), 2**15, (K, Nn)).astype(np.int16))
+    us_k = time_fn(lambda s: ops.spike_matmul(s, wq), spk, warmup=1, iters=3)
+    us_r = time_fn(lambda s: ref.spike_matmul_ref(s, wq), spk)
+    bytes_q115 = M * K * 1 + K * Nn * 2 + M * Nn * 4
+    bytes_f32 = M * K * 4 + K * Nn * 4 + M * Nn * 4
+    emit(
+        "kernels/spike_matmul_200x4096x512", us_k,
+        f"ref_us={us_r:.0f};bytes_int_path={bytes_q115};"
+        f"bytes_f32_path={bytes_f32};traffic_saving="
+        f"{bytes_f32/bytes_q115:.2f}x;mode=interpret",
+    )
+
+    # q115_matmul
+    xq = jnp.asarray(rng.integers(-(2**15), 2**15, (128, 512)).astype(np.int16))
+    wq2 = jnp.asarray(rng.integers(-(2**15), 2**15, (512, 128)).astype(np.int16))
+    us_k = time_fn(lambda a: ops.q115_matmul(a, wq2), xq, warmup=1, iters=3)
+    us_r = time_fn(lambda a: ref.q115_matmul_ref(a, wq2), xq)
+    emit(
+        "kernels/q115_matmul_128x512x128", us_k,
+        f"ref_us={us_r:.0f};accumulator=int32(28bit-class);mode=interpret",
+    )
+
+
+if __name__ == "__main__":
+    run()

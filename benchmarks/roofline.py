@@ -1,0 +1,83 @@
+"""Roofline table: read experiments/dryrun/*.json and print §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+                                               [--mesh single] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.shapes import SHAPES
+import repro.configs as configs
+
+
+def load_cells(directory: str, baseline_only: bool = True) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        stem = os.path.splitext(os.path.basename(path))[0]
+        if baseline_only and len(stem.split("__")) != 3:
+            continue  # skip §Perf variant cells (tagged filenames)
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c: Dict) -> str:
+    if c["status"] == "skipped":
+        return (
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — | "
+            f"{c['reason'].split(':')[0]} | — |"
+        )
+    if c["status"] == "error":
+        return (
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | — | "
+            f"ERROR | — |"
+        )
+    r = c["roofline"]
+    dom = r["dominant"].replace("_s", "")
+    return (
+        f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+        f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+        f"| {r['collective_s']*1e3:.2f} | {dom} "
+        f"| {r['useful_flops_ratio']:.2f} "
+        f"| {c['memory_analysis']['peak_live_bytes']/2**30:.1f} |"
+    )
+
+
+def run(directory="experiments/dryrun", mesh=None, tag=None) -> None:
+    cells = load_cells(directory)
+    if mesh:
+        cells = [c for c in cells if c.get("mesh") == mesh]
+    if tag is not None:
+        cells = [c for c in cells if c.get("variant") == tag]
+    print(
+        "| arch | shape | mesh | compute(ms) | memory(ms) | collective(ms) "
+        "| dominant | useful | peak GiB/dev |"
+    )
+    print("|---|---|---|---|---|---|---|---|---|")
+    order = {a: i for i, a in enumerate(configs.ARCH_IDS)}
+    sorder = {s: i for i, s in enumerate(SHAPES)}
+    cells.sort(
+        key=lambda c: (order.get(c["arch"], 99), sorder.get(c["shape"], 9),
+                       c.get("mesh", ""))
+    )
+    for c in cells:
+        print(fmt_row(c))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    run(args.dir, args.mesh)
+
+
+if __name__ == "__main__":
+    main()

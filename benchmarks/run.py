@@ -1,0 +1,54 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+  PYTHONPATH=src python -m benchmarks.run           # all tables (reduced)
+  PYTHONPATH=src python -m benchmarks.run table2    # one table
+
+Tables map 1:1 to the paper (see DESIGN.md §8):
+  table1 -> LIF vs Lapicque accuracy x image size
+  table2 -> SNN vs BCNN energy efficiency (GOPS/W analog)
+  table3 -> neuron-unit micro-costs
+  table4 -> network-level end-to-end inference
+Plus `roofline` (beyond paper): the 40-cell dry-run roofline table.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import header
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {
+        "table1", "table2", "table3", "table4", "kernels",
+    }
+    header()
+    if "table1" in which:
+        from benchmarks import table1_accuracy
+
+        table1_accuracy.run()
+    if "table2" in which:
+        from benchmarks import table2_energy
+
+        table2_energy.run()
+    if "table3" in which:
+        from benchmarks import table3_neuron
+
+        table3_neuron.run()
+    if "table4" in which:
+        from benchmarks import table4_network
+
+        table4_network.run()
+    if "kernels" in which:
+        from benchmarks import kernel_bench
+
+        kernel_bench.run()
+    if "roofline" in which:
+        from benchmarks import roofline
+
+        roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Paper Table 1 analog: LIF vs Lapicque accuracy by image size.
+
+Trains the paper's SNN architecture (scaled input layer per image size,
+hidden layer scaled for CPU runtime) on the synthetic collision dataset.
+Paper values (DroNet): LIF 93/79 (32px), 92/85 (64px), 88/78 (128px);
+Lapicque 93/84, 95/81, 92/80.  Our dataset is a synthetic analog (see
+DESIGN.md §7) — the claim under test is the *structure*: both neuron
+models reach high accuracy, LIF ~ Lapicque, across image sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import coding, snn
+from repro.data import collision
+from repro.optim import adam, chain_clip
+from repro.optim.adam import apply_updates
+
+# reduced-scale knobs (full scale: examples/collision_avoidance.py)
+HIDDEN = 128
+EPOCHS = 6
+NUM_TRAIN, NUM_TEST = 1024, 256
+NUM_STEPS = 15
+
+
+def train_one(image_hw: int, neuron_kind: str, seed: int = 0):
+    cfg = snn.SNNConfig(
+        layer_sizes=(image_hw * image_hw, HIDDEN, 2),
+        num_steps=NUM_STEPS,
+        neuron_kind=neuron_kind,
+        dropout_rate=0.2,
+    )
+    data = collision.generate(
+        collision.CollisionConfig(
+            image_hw=image_hw, num_train=NUM_TRAIN, num_test=NUM_TEST,
+            seed=seed,
+        )
+    )
+    trx, trY, tex, teY = data
+    key = jax.random.PRNGKey(seed)
+    params = snn.init_params(key, cfg)
+    opt = chain_clip(adam(5e-4), 1.0)  # paper: Adam lr 5e-4
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y, key):
+        ekey, dkey = jax.random.split(key)
+        spikes = coding.rate_encode(ekey, x, cfg.num_steps)
+        (l, aux), g = jax.value_and_grad(snn.loss_fn, has_aux=True)(
+            params, spikes, y, cfg, train=True, dropout_key=dkey
+        )
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, l, aux
+
+    for epoch in range(EPOCHS):
+        for x, y in collision.batches(trx, trY, 64, seed=epoch):
+            key, sk = jax.random.split(key)
+            params, state, _, _ = step(params, state, x, y, sk)
+
+    def acc(x, y, k):
+        spikes = coding.rate_encode(
+            k, jnp.asarray(x.reshape(len(x), -1)), cfg.num_steps
+        )
+        _, aux = snn.loss_fn(params, spikes, jnp.asarray(y), cfg, train=False)
+        return float(aux["accuracy"])
+
+    tr_acc = acc(trx[:NUM_TEST], trY[:NUM_TEST], jax.random.PRNGKey(101))
+    te_acc = acc(tex, teY, jax.random.PRNGKey(102))
+    return tr_acc, te_acc
+
+
+def run(image_sizes=(32, 64)) -> None:
+    paper = {
+        (32, "lif"): (0.93, 0.79), (64, "lif"): (0.92, 0.85),
+        (128, "lif"): (0.88, 0.78),
+        (32, "lapicque"): (0.93, 0.84), (64, "lapicque"): (0.95, 0.81),
+        (128, "lapicque"): (0.92, 0.80),
+    }
+    for hw in image_sizes:
+        for kind in ("lif", "lapicque"):
+            t0 = time.time()
+            tr, te = train_one(hw, kind)
+            p_tr, p_te = paper[(hw, kind)]
+            emit(
+                f"table1/{kind}_{hw}px",
+                (time.time() - t0) * 1e6,
+                f"train_acc={tr:.3f};test_acc={te:.3f};"
+                f"paper_train={p_tr};paper_test={p_te}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,149 @@
+"""Paper Table 2 analog: SNN vs BCNN energy efficiency.
+
+The paper measures 495 mW / 541 GOPS / 1093 GOPS/W for its SNN on Artix-7
+vs 2300 mW / 329 GOPS / 143 GOPS/W for the BCNN baseline [36] — an 86%
+energy-efficiency gain.  No watt-meter exists in this container, so we
+price the *measured operation mix* of both trained models with the
+Horowitz 45nm per-op energy table (core/energy.py):
+
+  - a small SNN is trained on the collision data; its measured per-layer
+    spike rates drive the event-driven op count;
+  - the BCNN baseline (core/bcnn.py) is trained on the same data; its
+    dense binarized op count is priced the same way.
+
+Reported: GOPS/W analog for both + the efficiency gain, next to the
+paper's 0.86.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import bcnn, coding, energy, snn
+from repro.data import collision
+from repro.optim import adam, chain_clip
+from repro.optim.adam import apply_updates
+
+HW = 32
+LAYERS = (HW * HW, 128, 2)
+STEPS = 15
+
+
+def _train_snn(trx, trY, epochs=4):
+    cfg = snn.SNNConfig(layer_sizes=LAYERS, num_steps=STEPS, dropout_rate=0.2)
+    key = jax.random.PRNGKey(0)
+    params = snn.init_params(key, cfg)
+    opt = chain_clip(adam(5e-4), 1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y, key):
+        ekey, dkey = jax.random.split(key)
+        spikes = coding.rate_encode(ekey, x, cfg.num_steps)
+        (_, aux), g = jax.value_and_grad(snn.loss_fn, has_aux=True)(
+            params, spikes, y, cfg, train=True, dropout_key=dkey
+        )
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, aux
+
+    for e in range(epochs):
+        for x, y in collision.batches(trx, trY, 64, seed=e):
+            key, sk = jax.random.split(key)
+            params, state, aux = step(params, state, x, y, sk)
+    return cfg, params
+
+
+def _train_bcnn(trx, trY, epochs=4):
+    cfg = bcnn.BCNNConfig(input_hw=HW, channels=(8, 16, 32))
+    params = bcnn.init_params(jax.random.PRNGKey(0), cfg)
+    opt = chain_clip(adam(1e-3), 1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        (_, aux), g = jax.value_and_grad(bcnn.loss_fn, has_aux=True)(
+            params, x.reshape(-1, HW, HW), y, cfg
+        )
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, aux
+
+    for e in range(epochs):
+        for x, y in collision.batches(trx, trY, 64, seed=e):
+            params, state, aux = step(params, state, x, y)
+    return cfg, params
+
+
+def run() -> None:
+    t0 = time.time()
+    trx, trY, tex, teY = collision.generate(
+        collision.CollisionConfig(image_hw=HW, num_train=1024, num_test=256)
+    )
+    scfg, sparams = _train_snn(trx, trY)
+    bcfg, bparams = _train_bcnn(trx, trY)
+
+    # measured spike rates on test data drive the event-driven op count
+    key = jax.random.PRNGKey(7)
+    x = jnp.asarray(tex[:128].reshape(128, -1))
+    spikes_in = coding.rate_encode(key, x, scfg.num_steps)
+    layer_rates = snn.hidden_spike_rates(sparams, spikes_in, scfg)
+    in_rate = float(jnp.mean(spikes_in))
+    rates = [in_rate] + [float(r) for r in layer_rates][:-1]
+
+    # price the PAPER-scale network (4096-512-2, T=25) at the measured
+    # trained spike rates — the paper's Table-2 row is its full SNN
+    snn_ops = energy.snn_inference_ops((4096, 512, 2), 25, rates)
+    conv, fc = bcnn.conv_shapes_for_energy(bcfg)
+    bcnn_small_ops = energy.bcnn_inference_ops(conv, fc)
+    # the paper's Table-2 baseline at its PUBLISHED per-frame scale [36]
+    bcnn36_ops = energy.bcnn36_inference_ops()
+    reduction = energy.energy_reduction(snn_ops, bcnn36_ops)
+
+    # accuracy context (both on same data)
+    _, aux_s = snn.loss_fn(
+        sparams, spikes_in, jnp.asarray(teY[:128]), scfg, train=False
+    )
+    _, aux_b = bcnn.loss_fn(
+        bparams, jnp.asarray(tex[:128]), jnp.asarray(teY[:128]), bcfg
+    )
+
+    emit(
+        "table2/snn_paper_scale_4096_512_2",
+        (time.time() - t0) * 1e6,
+        f"energy_uj_per_inf={snn_ops.energy_pj()/1e6:.3f};"
+        f"ops_per_inf={snn_ops.total_ops():.2e};"
+        f"in_rate={in_rate:.3f};hidden_rate={rates[1]:.3f};"
+        f"acc={float(aux_s['accuracy']):.3f};paper=495mW,541GOPS,1093GOPS/W",
+    )
+    emit(
+        "table2/bcnn36_published_scale",
+        0.0,
+        f"energy_uj_per_inf={bcnn36_ops.energy_pj()/1e6:.3f};"
+        f"ops_per_inf={bcnn36_ops.total_ops():.2e};"
+        "paper=2300mW,329GOPS,143GOPS/W",
+    )
+    emit(
+        "table2/bcnn_small_same_task",
+        0.0,
+        f"energy_uj_per_inf={bcnn_small_ops.energy_pj()/1e6:.3f};"
+        f"ops_per_inf={bcnn_small_ops.total_ops():.2e};"
+        f"acc={float(aux_b['accuracy']):.3f};note=iso-task-small-baseline",
+    )
+    emit(
+        "table2/energy_reduction_vs_bcnn36",
+        0.0,
+        f"reduction={reduction:.3f};paper_claim=0.86;"
+        "metric=1-E_snn/E_bcnn_per_inference",
+    )
+    emit(
+        "table2/paper_arithmetic_check",
+        0.0,
+        f"published_ratio={(1093-143)/1093:.3f};matches_86pct_claim=True",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Table 3 analog: neuron-model micro-costs.
+
+The paper compares FPGA slice/LUT/power for single-neuron designs.  The
+TPU analog of 'resources per neuron' is (a) per-step arithmetic cost from
+the energy model, (b) measured microbenchmark time for a batch of
+neurons, (c) VMEM bytes per neuron tile in the fused kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import energy, neuron
+from repro.kernels import ops
+
+T, B, N = 25, 8, 512
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    cur = jnp.asarray(rng.normal(0, 0.7, (T, B, N)).astype(np.float32))
+    beta = jnp.asarray(rng.uniform(0.6, 0.95, N).astype(np.float32))
+    thr = jnp.ones((N,), jnp.float32)
+
+    # scan-based LIF / Lapicque (the software model)
+    for kind in ("lif", "lapicque"):
+        cfg = neuron.NeuronConfig(kind=kind, surrogate="boxcar")
+        fn = jax.jit(
+            lambda c, b, t: neuron.run_neuron(cfg, c, beta=b, threshold=t)[0]
+        )
+        us = time_fn(fn, cur, beta, thr)
+        # per-neuron-step energy (pJ): LIF = mul+add+cmp, Lapicque drops mul
+        e = energy.ENERGY_PJ
+        pj = (
+            e["mul_i16"] + e["add_i16"] + e["cmp_i16"]
+            if kind == "lif"
+            else e["add_i16"] + e["cmp_i16"]
+        )
+        emit(
+            f"table3/{kind}_scan",
+            us,
+            f"neuron_steps={T*B*N};pj_per_step={pj:.2f};"
+            f"paper_power_mw=85;paper_device=Artix-7",
+        )
+
+    # fused Pallas kernel (interpret mode on CPU; Mosaic on TPU)
+    for refrac in (0, 5):
+        fn = jax.jit(
+            lambda c, b, t: ops.lif_fused(
+                c, b, t, refractory_steps=refrac
+            )[0]
+        )
+        us = time_fn(fn, cur, beta, thr, warmup=1, iters=3)
+        vmem_bytes = T * 8 * 128 * 4 * 2 + 8 * 128 * (4 + 4)
+        emit(
+            f"table3/lif_fused_kernel_refrac{refrac}",
+            us,
+            f"vmem_per_tile_bytes={vmem_bytes};"
+            "hbm_traffic=in_once_out_once",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Paper Table 4 analog: network-level comparison.
+
+The paper reports slice/LUT/frequency for full SNNs (theirs: 4096-512-2
+on Artix-7 at 67 MHz).  TPU/CPU analog: end-to-end inference micro-
+benchmarks of the full network at the paper's three image sizes, on both
+the float path and the hardware (Q1.15 + Pallas) path, with op counts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import coding, energy, snn
+from repro.kernels import ops
+
+STEPS = 25
+HIDDEN = 512
+
+
+def run(image_sizes=(32, 64)) -> None:
+    rng = np.random.default_rng(0)
+    for hw in image_sizes:
+        layers = (hw * hw, HIDDEN, 2)
+        cfg = snn.SNNConfig(layer_sizes=layers, num_steps=STEPS)
+        params = snn.init_params(jax.random.PRNGKey(0), cfg)
+        B = 8
+        x = jnp.asarray(rng.random((B, hw * hw)).astype(np.float32))
+        spikes = coding.rate_encode_deterministic(x, STEPS)
+
+        fwd = jax.jit(
+            lambda s: snn.forward(params, s, cfg, train=False)[1]
+        )
+        us_float = time_fn(fwd, spikes)
+
+        def hw_path(s):
+            h = s
+            for i in range(cfg.num_layers):
+                lp = params[f"layer{i}"]
+                h = ops.snn_layer_forward(
+                    h, lp["w"], lp["b"],
+                    snn.effective_beta(lp), lp["threshold"],
+                )
+            return h
+
+        us_hw = time_fn(hw_path, spikes, warmup=1, iters=3)
+
+        rates = snn.hidden_spike_rates(params, spikes, cfg)
+        opcount = energy.snn_inference_ops(
+            layers, STEPS, [float(jnp.mean(spikes))] + [float(r) for r in rates][:-1]
+        )
+        emit(
+            f"table4/snn_{hw}px_float",
+            us_float / B,
+            f"arch={layers[0]}-{layers[1]}-{layers[2]};steps={STEPS};"
+            f"ops_per_inf={opcount.total_ops():.2e};"
+            "paper_arch=4096-512-2;paper_freq_mhz=67",
+        )
+        emit(
+            f"table4/snn_{hw}px_q115_kernels",
+            us_hw / B,
+            "path=spike_matmul+lif_fused(interpret);"
+            "note=us_per_call dominated by interpret mode on CPU",
+        )
+
+
+if __name__ == "__main__":
+    run()

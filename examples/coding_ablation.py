@@ -1,0 +1,76 @@
+"""Input-coding ablation (paper §3.2): rate vs TTFS vs deterministic rate.
+
+The paper chooses Bernoulli rate coding "for its simplicity and
+robustness"; this ablation quantifies the choice on the collision task:
+accuracy, total input spike count (the event-driven energy driver), and
+energy per inference.
+
+  PYTHONPATH=src python examples/coding_ablation.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, energy, snn
+from repro.data import collision
+from repro.optim import adam, chain_clip
+from repro.optim.adam import apply_updates
+
+CFG = snn.SNNConfig(layer_sizes=(1024, 128, 2), num_steps=20,
+                    dropout_rate=0.2)
+DATA = collision.CollisionConfig(image_hw=32, num_train=1024, num_test=256)
+
+ENCODERS = {
+    "rate (paper)": lambda key, x, T: coding.rate_encode(key, x, T),
+    "rate_deterministic": lambda key, x, T: coding.rate_encode_deterministic(x, T),
+    "ttfs": lambda key, x, T: coding.ttfs_encode(x, T),
+}
+
+
+def train_eval(encode, data, seed=0):
+    trx, trY, tex, teY = data
+    key = jax.random.PRNGKey(seed)
+    params = snn.init_params(key, CFG)
+    opt = chain_clip(adam(5e-4), 1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y, k):
+        ek, dk = jax.random.split(k)
+        spikes = encode(ek, x, CFG.num_steps)
+        (_, aux), g = jax.value_and_grad(snn.loss_fn, has_aux=True)(
+            params, spikes, y, CFG, train=True, dropout_key=dk
+        )
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, aux
+
+    for epoch in range(4):
+        for x, y in collision.batches(trx, trY, 64, seed=epoch):
+            key, sk = jax.random.split(key)
+            params, state, _ = step(params, state, x, y, sk)
+
+    key, ek = jax.random.split(key)
+    spikes = encode(ek, jnp.asarray(tex.reshape(len(tex), -1)), CFG.num_steps)
+    _, aux = snn.loss_fn(params, spikes, jnp.asarray(teY), CFG, train=False)
+    in_rate = float(jnp.mean(spikes))
+    rates = snn.hidden_spike_rates(params, spikes, CFG)
+    layer_rates = [in_rate] + [float(r) for r in rates][:-1]
+    e_pj = energy.snn_inference_ops(
+        CFG.layer_sizes, CFG.num_steps, layer_rates
+    ).energy_pj()
+    return float(aux["accuracy"]), in_rate, e_pj
+
+
+def main():
+    data = collision.generate(DATA)
+    print(f"{'encoder':20s} | test_acc | input_rate | energy/inf (nJ)")
+    for name, enc in ENCODERS.items():
+        acc, rate, e_pj = train_eval(enc, data)
+        print(f"{name:20s} | {acc:8.3f} | {rate:10.4f} | {e_pj/1e3:10.2f}")
+    print("\nTTFS emits at most one spike per pixel (T-fold fewer input "
+          "events) — the energy-optimal code when accuracy holds; the "
+          "paper's rate coding is the robust default.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Refractory-period ablation (paper §4.2.2).
+
+Trains the same reduced SNN with refractory periods {0, 2, 5, 8} and
+reports accuracy AND spike rate — the energy angle: the refractory period
+caps each neuron's firing rate, which in the event-driven hardware
+(cascaded adder only integrates active synapses) translates directly into
+energy per inference (core/energy.py).
+
+  PYTHONPATH=src python examples/refractory_ablation.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, energy, snn
+from repro.data import collision
+from repro.optim import adam, chain_clip
+from repro.optim.adam import apply_updates
+
+BASE = snn.SNNConfig(layer_sizes=(1024, 128, 2), num_steps=20,
+                     dropout_rate=0.2)
+DATA = collision.CollisionConfig(image_hw=32, num_train=1024, num_test=256)
+
+
+def train_eval(cfg, data, seed=0):
+    trx, trY, tex, teY = data
+    key = jax.random.PRNGKey(seed)
+    params = snn.init_params(key, cfg)
+    opt = chain_clip(adam(5e-4), 1.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y, k):
+        ek, dk = jax.random.split(k)
+        spikes = coding.rate_encode(ek, x, cfg.num_steps)
+        (_, aux), g = jax.value_and_grad(snn.loss_fn, has_aux=True)(
+            params, spikes, y, cfg, train=True, dropout_key=dk
+        )
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, aux
+
+    for epoch in range(4):
+        for x, y in collision.batches(trx, trY, 64, seed=epoch):
+            key, sk = jax.random.split(key)
+            params, state, _ = step(params, state, x, y, sk)
+
+    key, ek = jax.random.split(key)
+    spikes = coding.rate_encode(
+        ek, jnp.asarray(tex.reshape(len(tex), -1)), cfg.num_steps
+    )
+    _, aux = snn.loss_fn(params, spikes, jnp.asarray(teY), cfg, train=False)
+    rates = snn.hidden_spike_rates(params, spikes, cfg)
+    in_rate = float(jnp.mean(spikes))
+    layer_rates = [in_rate] + [float(r) for r in rates][:-1]
+    ops = energy.snn_inference_ops(
+        cfg.layer_sizes, cfg.num_steps, layer_rates
+    )
+    return float(aux["accuracy"]), layer_rates, ops.energy_pj()
+
+
+def main():
+    data = collision.generate(DATA)
+    print("refractory | test_acc | hidden_rate | energy/inf (nJ)")
+    base_energy = None
+    for r in (0, 2, 5, 8):
+        cfg = dataclasses.replace(BASE, refractory_steps=r)
+        acc, rates, e_pj = train_eval(cfg, data)
+        if base_energy is None:
+            base_energy = e_pj
+        print(
+            f"{r:10d} | {acc:8.3f} | {rates[1]:11.4f} | "
+            f"{e_pj/1e3:9.2f}  ({e_pj/base_energy:.2f}x)"
+        )
+    print("\npaper §4.2.2 uses refractory=5; the table quantifies the "
+          "accuracy/energy trade the hardware design exploits.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Fault-tolerant checkpointing: atomic writes, keep-N, auto-resume,
+elastic (mesh-shape-independent) restore.
+
+Design for the 1000+-node target:
+  - checkpoints are written *atomically* (tmp dir + rename) so a node
+    failure mid-save never corrupts the latest checkpoint;
+  - save gathers to host-replicated numpy (npz per pytree) — restore can
+    therefore reshard onto ANY mesh (elastic scaling: train on 512 chips,
+    resume on 256);
+  - `latest_step()` + `restore_latest()` implement checkpoint/restart: the
+    launcher always calls restore_latest and starts from step 0 only when
+    nothing is found (see launch/train.py);
+  - background-thread save (`async_save=True`) overlaps serialization with
+    the next step (double-buffered via a copied host tree), the standard
+    straggler/throughput mitigation for frequent checkpoints;
+  - keep_n bounds disk usage.
+
+On a real multi-host pod the gather maps to `multihost_utils.
+process_allgather` and only host 0 writes; in this single-host container
+that path degenerates to device_get, which is what we exercise in tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_with_names(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str,
+        keep_n: int = 3,
+        async_save: bool = False,
+    ):
+        self.directory = directory
+        self.keep_n = keep_n
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------ save
+    def save(self, step: int, tree: PyTree, metadata: Optional[Dict] = None):
+        """Atomic checkpoint of an arbitrary pytree at `step`."""
+        names, leaves, _ = _flatten_with_names(tree)
+        host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+        if self.async_save:
+            self.wait()  # at most one in-flight save
+            self._thread = threading.Thread(
+                target=self._write, args=(step, names, host_leaves, metadata)
+            )
+            self._thread.start()
+        else:
+            self._write(step, names, host_leaves, metadata)
+
+    def _write(self, step, names, host_leaves, metadata):
+        final = os.path.join(self.directory, f"step_{step:010d}")
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            np.savez(
+                os.path.join(tmp, "arrays.npz"),
+                **{f"a{i}": x for i, x in enumerate(host_leaves)},
+            )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(
+                    {"step": step, "names": names, "metadata": metadata or {}},
+                    f,
+                )
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep_n] if self.keep_n else []:
+            shutil.rmtree(
+                os.path.join(self.directory, f"step_{s:010d}"),
+                ignore_errors=True,
+            )
+
+    # --------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_"):
+                # ignore partially-renamed/corrupt dirs without manifest
+                if os.path.exists(
+                    os.path.join(self.directory, d, "manifest.json")
+                ):
+                    out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(
+        self, step: int, like: PyTree, shardings: Optional[PyTree] = None
+    ) -> PyTree:
+        """Restore into the structure of `like`; optionally placed onto
+        `shardings` (elastic restore — any mesh shape)."""
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        names, like_leaves, treedef = _flatten_with_names(like)
+        if names != manifest["names"]:
+            raise ValueError(
+                "checkpoint/model structure mismatch: "
+                f"{set(names) ^ set(manifest['names'])}"
+            )
+        leaves = [data[f"a{i}"] for i in range(len(names))]
+        leaves = [
+            np.asarray(x).astype(l.dtype) if hasattr(l, "dtype") else x
+            for x, l in zip(leaves, like_leaves)
+        ]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        return tree
+
+    def restore_latest(
+        self, like: PyTree, shardings: Optional[PyTree] = None
+    ) -> Tuple[Optional[int], Optional[PyTree]]:
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, like, shardings)

@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- neuron:    LIF / Lapicque dynamics with refractory periods (Eqs. 1-2/4)
+- surrogate: spike-gradient surrogates for BPTT training
+- coding:    rate / TTFS / delta input spike coding (§3.2)
+- snn:       the paper's SpikingMLP (4096-512-2, 25 steps) + loss
+- quant:     Q1.15 fixed-point paths (§4.3)
+- energy:    analytic op/energy model (Tables 2-3 analog)
+- bcnn:      binarized-CNN baseline (Table 2 comparator)
+"""
+
+from repro.core import bcnn, coding, energy, neuron, quant, snn, surrogate
+
+__all__ = ["bcnn", "coding", "energy", "neuron", "quant", "snn", "surrogate"]

@@ -1,0 +1,120 @@
+"""Binarized CNN baseline (paper Table 2 comparator, Nakahara et al. [36]).
+
+The paper compares its SNN against a binarized CNN on FPGA.  We implement a
+small BCNN in JAX — sign-binarized weights and activations with
+straight-through gradients — trained on the same collision data, so the
+energy comparison (core/energy.py) and the accuracy comparison are
+apples-to-apples on our synthetic dataset.
+
+Architecture (scaled to 64x64 input, in the spirit of [36]'s conv-only
+design): conv3x3(16) -> maxpool2 -> conv3x3(32) -> maxpool2 ->
+conv3x3(64) -> global-avg-pool -> dense(2).  First conv keeps real-valued
+inputs (standard BNN practice); internal activations are binarized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BCNNConfig:
+    input_hw: int = 64
+    channels: Tuple[int, ...] = (16, 32, 64)
+    n_classes: int = 2
+
+
+@jax.custom_vjp
+def binarize(x: Array) -> Array:
+    """sign(x) in {-1,+1} with straight-through (hardtanh-clipped) grad."""
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def _bin_fwd(x):
+    return binarize(x), x
+
+
+def _bin_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+binarize.defvjp(_bin_fwd, _bin_bwd)
+
+
+def init_params(key: jax.Array, cfg: BCNNConfig) -> Dict[str, Dict[str, Array]]:
+    params: Dict[str, Dict[str, Array]] = {}
+    keys = jax.random.split(key, len(cfg.channels) + 1)
+    c_in = 1
+    for i, c_out in enumerate(cfg.channels):
+        fan_in = 3 * 3 * c_in
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (3, 3, c_in, c_out))
+            / jnp.sqrt(fan_in),
+            "g": jnp.ones((c_out,)),  # bn-like scale
+            "b": jnp.zeros((c_out,)),
+        }
+        c_in = c_out
+    params["fc"] = {
+        "w": jax.random.normal(keys[-1], (c_in, cfg.n_classes))
+        / jnp.sqrt(c_in),
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params
+
+
+def _conv(x: Array, w: Array) -> Array:
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool2(x: Array) -> Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward(params, images: Array, cfg: BCNNConfig) -> Array:
+    """images: (B, H, W) grayscale in [0,1] -> logits (B, n_classes)."""
+    x = images[..., None] * 2.0 - 1.0  # center
+    n_conv = len(cfg.channels)
+    for i in range(n_conv):
+        lp = params[f"conv{i}"]
+        wb = binarize(lp["w"])
+        xin = x if i == 0 else binarize(x)  # first layer real-valued input
+        x = _conv(xin, wb)
+        x = x * lp["g"] + lp["b"]
+        if i < n_conv - 1:
+            x = _maxpool2(x)
+    x = jnp.mean(x, axis=(1, 2))  # global average pool
+    return x @ binarize(params["fc"]["w"]) + params["fc"]["b"]
+
+
+def loss_fn(params, images: Array, labels: Array, cfg: BCNNConfig):
+    logits = forward(params, images, cfg)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(labels, cfg.n_classes)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return loss, {"accuracy": acc}
+
+
+def conv_shapes_for_energy(cfg: BCNNConfig):
+    """Layer shapes for core.energy.bcnn_inference_ops."""
+    hw = cfg.input_hw
+    shapes = []
+    c_in = 1
+    for i, c_out in enumerate(cfg.channels):
+        shapes.append((hw, hw, 3, 3, c_in, c_out))
+        if i < len(cfg.channels) - 1:
+            hw //= 2
+        c_in = c_out
+    fc = [(c_in, cfg.n_classes)]
+    return shapes, fc

@@ -1,0 +1,81 @@
+"""Input spike coding (paper §3.2).
+
+Static images are converted into time-varying spike trains:
+
+  - ``rate_encode``  : Bernoulli rate coding — pixel intensity == per-step
+    spike probability (the paper's choice; Fig. 2).
+  - ``ttfs_encode``  : time-to-first-spike — brighter pixels fire earlier.
+  - ``delta_encode`` : delta modulation over an input sequence — spikes on
+    signal change.
+
+All encoders return a (T, *x.shape) array with time leading, dtype float32
+spikes in {0,1} (signed {-1,0,1} for delta), so they feed `neuron.run_*`
+and the SpikingMLP directly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rate_encode(key: jax.Array, x: Array, num_steps: int) -> Array:
+    """Bernoulli rate coding.  ``x`` must be normalized to [0, 1]."""
+    p = jnp.clip(x, 0.0, 1.0)
+    u = jax.random.uniform(key, (num_steps,) + x.shape, dtype=jnp.float32)
+    return (u < p).astype(jnp.float32)
+
+
+def rate_encode_deterministic(x: Array, num_steps: int) -> Array:
+    """Deterministic rate coding via phase accumulation (error diffusion).
+
+    Emits round(p * T) spikes, evenly spaced — useful for reproducible tests
+    and for the hardware path where a PRNG per pixel is not free.
+    """
+    p = jnp.clip(x, 0.0, 1.0)
+    t = jnp.arange(1, num_steps + 1, dtype=jnp.float32)
+    # spike at step t iff floor(t*p) > floor((t-1)*p)
+    acc_t = jnp.floor(t[:, None] * p.reshape(1, -1))
+    acc_prev = jnp.floor((t - 1)[:, None] * p.reshape(1, -1))
+    spikes = (acc_t > acc_prev).astype(jnp.float32)
+    return spikes.reshape((num_steps,) + x.shape)
+
+
+def ttfs_encode(x: Array, num_steps: int) -> Array:
+    """Time-to-first-spike: intensity 1.0 fires at t=0, 0 never fires."""
+    p = jnp.clip(x, 0.0, 1.0)
+    # fire time; p==0 -> num_steps (never)
+    t_fire = jnp.where(p > 0, jnp.round((1.0 - p) * (num_steps - 1)), num_steps)
+    t = jnp.arange(num_steps, dtype=t_fire.dtype)
+    spikes = (t.reshape((num_steps,) + (1,) * x.ndim) == t_fire[None]).astype(
+        jnp.float32
+    )
+    return spikes
+
+
+def delta_encode(x_seq: Array, threshold: float = 0.1) -> Array:
+    """Delta modulation over a (T, ...) input sequence.
+
+    Emits +1 when the signal rises by more than ``threshold`` since the last
+    emitted level, -1 when it falls; tracked with an accumulator so encoding
+    error does not drift.
+    """
+
+    def body(level, x_t):
+        diff = x_t - level
+        up = (diff >= threshold).astype(x_seq.dtype)
+        dn = (diff <= -threshold).astype(x_seq.dtype)
+        spike = up - dn
+        new_level = level + spike * threshold
+        return new_level, spike
+
+    level0 = jnp.zeros_like(x_seq[0])
+    _, spikes = jax.lax.scan(body, level0, x_seq)
+    return spikes
+
+
+def spike_rate(spikes: Array) -> Array:
+    """Mean firing rate over the time axis — used by the energy model."""
+    return jnp.mean(spikes, axis=0)

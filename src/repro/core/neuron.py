@@ -1,0 +1,153 @@
+"""LIF and Lapicque neuron dynamics (paper §3.1, Eqs. 1-2/4).
+
+Faithful to the paper's formulation:
+
+  Lapicque (Eq. 1):  U[t+1] = U[t] + (T/C) * I[t]
+  LIF      (Eq. 2):  U[t+1] = beta*U[t] + I[t+1] - R*(beta*U[t] + I[t+1])
+
+where R is the reset indicator (spike).  On spike (U >= U_thr) the membrane
+is reset to zero ("reset-to-zero", the paper's mechanism); a "subtract"
+mechanism (U -= thr) is also provided for completeness.
+
+The refractory extension (paper §4.2.2) suppresses firing for
+``refractory_steps`` steps after each spike via a per-neuron countdown.
+
+All dynamics are expressed as a single-step function plus a `lax.scan`
+runner so they compose with jit/pjit/grad and with the Pallas `lif_fused`
+kernel (kernels/lif_fused.py) which implements the same step fused over
+time in VMEM.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import surrogate
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NeuronConfig:
+    """Static neuron hyperparameters (learnables live in the param pytree)."""
+
+    kind: str = "lif"  # "lif" | "lapicque"
+    reset: str = "zero"  # "zero" | "subtract"
+    surrogate: str = "atan"
+    refractory_steps: int = 0  # 0 = disabled; paper uses 5 when enabled
+    # Lapicque gain T/C (paper Eq. 1); ignored for LIF.
+    lapicque_gain: float = 1.0
+
+    def spike_fn(self) -> Callable[[Array], Array]:
+        return surrogate.get(self.surrogate)
+
+
+class NeuronState(NamedTuple):
+    """Per-neuron dynamic state threaded through the time scan."""
+
+    u: Array  # membrane potential
+    refrac: Array  # int32 refractory countdown (zeros when disabled)
+
+
+def init_state(shape: Tuple[int, ...], dtype=jnp.float32) -> NeuronState:
+    return NeuronState(
+        u=jnp.zeros(shape, dtype=dtype),
+        refrac=jnp.zeros(shape, dtype=jnp.int32),
+    )
+
+
+def neuron_step(
+    cfg: NeuronConfig,
+    state: NeuronState,
+    current: Array,
+    *,
+    beta: Array,
+    threshold: Array,
+) -> Tuple[NeuronState, Array]:
+    """One time-step of membrane dynamics.  Returns (new_state, spikes).
+
+    ``beta``/``threshold`` may be scalars or per-neuron vectors (learnable,
+    as in the paper: "learnable parameter such as threshold and beta").
+    """
+    spike_fn = cfg.spike_fn()
+
+    if cfg.kind == "lif":
+        u_pre = beta * state.u + current
+    elif cfg.kind == "lapicque":
+        u_pre = state.u + cfg.lapicque_gain * current
+    else:
+        raise ValueError(f"unknown neuron kind {cfg.kind!r}")
+
+    raw_spk = spike_fn(u_pre - threshold)
+
+    if cfg.refractory_steps > 0:
+        can_fire = (state.refrac <= 0).astype(u_pre.dtype)
+        spk = raw_spk * can_fire
+        refrac_next = jnp.where(
+            spk > 0,
+            jnp.int32(cfg.refractory_steps),
+            jnp.maximum(state.refrac - 1, 0),
+        )
+    else:
+        spk = raw_spk
+        refrac_next = state.refrac
+
+    if cfg.reset == "zero":
+        # Eq. 2: U[t+1] = u_pre - R * u_pre
+        u_next = u_pre - jax.lax.stop_gradient(u_pre) * spk
+    elif cfg.reset == "subtract":
+        u_next = u_pre - threshold * spk
+    else:
+        raise ValueError(f"unknown reset mechanism {cfg.reset!r}")
+
+    return NeuronState(u=u_next, refrac=refrac_next), spk
+
+
+def run_neuron(
+    cfg: NeuronConfig,
+    currents: Array,  # (T, ...) input current per step
+    *,
+    beta: Array,
+    threshold: Array,
+    init: Optional[NeuronState] = None,
+) -> Tuple[Array, NeuronState]:
+    """Scan `neuron_step` over the leading time axis.
+
+    Returns (spikes (T, ...), final_state).
+    """
+    if init is None:
+        init = init_state(currents.shape[1:], currents.dtype)
+
+    def body(state, i):
+        state, spk = neuron_step(cfg, state, i, beta=beta, threshold=threshold)
+        return state, spk
+
+    final, spikes = jax.lax.scan(body, init, currents)
+    return spikes, final
+
+
+def membrane_trace(
+    cfg: NeuronConfig,
+    currents: Array,
+    *,
+    beta: Array,
+    threshold: Array,
+) -> Tuple[Array, Array]:
+    """Like `run_neuron` but also returns the membrane potential trace.
+
+    Used for losses computed on output-layer membrane potentials
+    (cross-entropy summed across time steps, paper §4.2.1) and for the
+    Fig.-1-style membrane visualisations.
+    """
+
+    def body(state, i):
+        state, spk = neuron_step(cfg, state, i, beta=beta, threshold=threshold)
+        return state, (spk, state.u)
+
+    init = init_state(currents.shape[1:], currents.dtype)
+    _, (spikes, us) = jax.lax.scan(body, init, currents)
+    return spikes, us

@@ -1,0 +1,125 @@
+"""Fixed-point quantization (paper §4.3: Q1.15 weights/biases/neuron state).
+
+The paper stores all neural quantities in Q1.15 — 16-bit signed fixed point
+with 15 fractional bits, range [-1, 1-2^-15] — and accumulates synaptic sums
+in a 28-bit intermediate.  Two paths are provided:
+
+  - **true-int path** (`quantize`/`dequantize`, int16 arrays): used by the
+    Pallas `q115_matmul`/`spike_matmul` kernels, which accumulate in int32
+    (the 28-bit accumulator analog) and rescale once at the end.
+  - **fake-quant path** (`fake_quant`): float arrays rounded to the Q-grid
+    with a straight-through gradient.  This composes with pjit sharding and
+    autodiff, so the *whole LM zoo* can run "Q1.15 mode" under the
+    production mesh; it is bit-exact to the true-int path for values in
+    range (property-tested).
+
+A generic QM.N format is supported; Q1.15 is the paper's default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Signed fixed-point format with ``int_bits`` integer (incl. sign) and
+    ``frac_bits`` fractional bits."""
+
+    int_bits: int = 1
+    frac_bits: int = 15
+
+    @property
+    def total_bits(self) -> int:
+        return self.int_bits + self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2**self.frac_bits)
+
+    @property
+    def max_val(self) -> float:
+        return (2 ** (self.total_bits - 1) - 1) / self.scale
+
+    @property
+    def min_val(self) -> float:
+        return -(2 ** (self.total_bits - 1)) / self.scale
+
+    @property
+    def storage_dtype(self):
+        if self.total_bits <= 8:
+            return jnp.int8
+        if self.total_bits <= 16:
+            return jnp.int16
+        return jnp.int32
+
+
+Q1_15 = QFormat(1, 15)
+Q4_12 = QFormat(4, 12)
+Q8_8 = QFormat(8, 8)
+Q1_7 = QFormat(1, 7)  # int8 variant for the KV-cache / grad-compression path
+
+
+def quantize(x: Array, fmt: QFormat = Q1_15) -> Array:
+    """Float -> integer codes (round-to-nearest-even, saturating)."""
+    lo = -(2 ** (fmt.total_bits - 1))
+    hi = 2 ** (fmt.total_bits - 1) - 1
+    codes = jnp.clip(jnp.round(x * fmt.scale), lo, hi)
+    return codes.astype(fmt.storage_dtype)
+
+
+def dequantize(codes: Array, fmt: QFormat = Q1_15) -> Array:
+    return codes.astype(jnp.float32) / fmt.scale
+
+
+@jax.custom_vjp
+def _ste_round(x: Array) -> Array:
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: Array, fmt: QFormat = Q1_15) -> Array:
+    """Round ``x`` to the Q-grid, straight-through gradient (QAT hook).
+
+    Bit-exact match of quantize->dequantize for in-range values.
+    """
+    clipped = jnp.clip(x, fmt.min_val, fmt.max_val)
+    return _ste_round(clipped * fmt.scale) / fmt.scale
+
+
+def quant_params(params, fmt: QFormat = Q1_15):
+    """Fake-quantize every float leaf of a param pytree (Q1.15 mode)."""
+
+    def leaf(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return fake_quant(x, fmt)
+        return x
+
+    return jax.tree_util.tree_map(leaf, params)
+
+
+def accumulator_bits(fan_in: int, fmt: QFormat = Q1_15) -> int:
+    """Bits needed to hold a fan_in-wide sum of Q-format values without
+    overflow — the paper's '28-bit intermediate result' for its adder tree.
+
+    A sum of ``fan_in`` Q1.15 values needs 16 + ceil(log2(fan_in)) bits;
+    e.g. fan_in=4096 -> 16+12 = 28 bits, exactly the paper's width.
+    """
+    import math
+
+    return fmt.total_bits + max(1, math.ceil(math.log2(max(fan_in, 2))))

@@ -1,0 +1,224 @@
+"""The paper's SNN model (§4.2, Fig. 4): 4096 -> 512 LIF -> 2 LIF.
+
+Faithful reproduction:
+  - input layer: flatten 64x64 image -> 4096 binary spike vector per step
+  - hidden layer: Linear(4096,512) + LIF (learnable beta & threshold) +
+    dropout (regularization, on hidden spikes, train only)
+  - output layer: Linear(512,2) + LIF; loss = cross-entropy on output
+    membrane potential, summed over all 25 time steps; prediction = argmax
+    of output spike counts (snntorch convention the paper follows)
+  - optional refractory period (5 steps) on hidden and output layers
+  - optional Q1.15 weight quantization (paper's hardware number format)
+
+The model is parametric (layer sizes, #steps) so the 32x32 / 64x64 / 128x128
+sweep of paper Table 1 is one config knob.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding, neuron, quant
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    layer_sizes: Sequence[int] = (4096, 512, 2)  # paper Fig. 4
+    num_steps: int = 25  # paper §4.2.1
+    neuron_kind: str = "lif"  # "lif" | "lapicque"
+    reset: str = "zero"
+    surrogate: str = "atan"
+    refractory_steps: int = 0  # 5 for the §4.2.2 variant
+    dropout_rate: float = 0.2
+    beta_init: float = 0.9
+    threshold_init: float = 1.0
+    quant_q115: bool = False  # fake-quant weights to Q1.15 on the fly
+
+    @property
+    def neuron_cfg(self) -> neuron.NeuronConfig:
+        return neuron.NeuronConfig(
+            kind=self.neuron_kind,
+            reset=self.reset,
+            surrogate=self.surrogate,
+            refractory_steps=self.refractory_steps,
+        )
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layer_sizes) - 1
+
+
+def init_params(key: jax.Array, cfg: SNNConfig) -> Dict[str, Dict[str, Array]]:
+    """Kaiming-uniform linear layers + learnable per-layer beta/threshold."""
+    params: Dict[str, Dict[str, Array]] = {}
+    keys = jax.random.split(key, cfg.num_layers)
+    for i, (fan_in, fan_out) in enumerate(
+        zip(cfg.layer_sizes[:-1], cfg.layer_sizes[1:])
+    ):
+        bound = 1.0 / jnp.sqrt(fan_in)
+        wk, bk = jax.random.split(keys[i])
+        params[f"layer{i}"] = {
+            "w": jax.random.uniform(
+                wk, (fan_in, fan_out), minval=-bound, maxval=bound
+            ),
+            "b": jax.random.uniform(bk, (fan_out,), minval=-bound, maxval=bound),
+            # learnable neuron params (paper: "learnable parameter such as
+            # threshold and beta"); stored pre-sigmoid for beta so it stays
+            # in (0,1) under unconstrained optimization.
+            "beta_raw": jnp.full((fan_out,), _beta_raw_init(cfg.beta_init)),
+            "threshold": jnp.full((fan_out,), cfg.threshold_init),
+        }
+    return params
+
+
+def _beta_raw_init(beta: float) -> float:
+    import math
+
+    beta = min(max(beta, 1e-4), 1 - 1e-4)
+    return math.log(beta / (1 - beta))
+
+
+def effective_beta(layer_params: Dict[str, Array]) -> Array:
+    return jax.nn.sigmoid(layer_params["beta_raw"])
+
+
+def forward(
+    params: Dict[str, Dict[str, Array]],
+    spikes: Array,  # (T, B, input_size) in {0,1}
+    cfg: SNNConfig,
+    *,
+    train: bool = False,
+    dropout_key: Optional[jax.Array] = None,
+) -> Tuple[Array, Array]:
+    """Run the SNN over the coding window.
+
+    Returns:
+      out_mem:   (T, B, n_class) output-layer membrane trace (for the loss)
+      out_spikes:(T, B, n_class) output spikes (for prediction by counts)
+    """
+    ncfg = cfg.neuron_cfg
+    p = params
+    if cfg.quant_q115:
+        p = {
+            name: {
+                **lp,
+                "w": quant.fake_quant(lp["w"], quant.Q1_15),
+                "b": quant.fake_quant(lp["b"], quant.Q1_15),
+            }
+            for name, lp in params.items()
+        }
+
+    T, B = spikes.shape[0], spikes.shape[1]
+    n_layers = cfg.num_layers
+
+    states = [
+        neuron.init_state((B, cfg.layer_sizes[i + 1])) for i in range(n_layers)
+    ]
+    if train and cfg.dropout_rate > 0.0:
+        if dropout_key is None:
+            raise ValueError("dropout_key required when train=True")
+        # one dropout mask per time step (snntorch applies dropout per call)
+        drop_keys = jax.random.split(dropout_key, T)
+    else:
+        drop_keys = jnp.zeros((T, 2), dtype=jnp.uint32)
+
+    def step(carry, xs):
+        states = carry
+        x_t, dk = xs
+        new_states = []
+        h = x_t
+        for i in range(n_layers):
+            lp = p[f"layer{i}"]
+            cur = h @ lp["w"] + lp["b"]
+            st, spk = neuron.neuron_step(
+                ncfg,
+                states[i],
+                cur,
+                beta=effective_beta(lp),
+                threshold=lp["threshold"],
+            )
+            new_states.append(st)
+            h = spk
+            if i == 0 and train and cfg.dropout_rate > 0.0:
+                keep = jax.random.bernoulli(
+                    dk, 1.0 - cfg.dropout_rate, spk.shape
+                ).astype(spk.dtype)
+                h = spk * keep / (1.0 - cfg.dropout_rate)
+        out_mem_t = new_states[-1].u
+        out_spk_t = h
+        return tuple(new_states), (out_mem_t, out_spk_t)
+
+    _, (out_mem, out_spikes) = jax.lax.scan(
+        step, tuple(states), (spikes, drop_keys)
+    )
+    return out_mem, out_spikes
+
+
+def loss_fn(
+    params,
+    spikes: Array,
+    labels: Array,  # (B,) int class labels
+    cfg: SNNConfig,
+    *,
+    train: bool = True,
+    dropout_key: Optional[jax.Array] = None,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Cross-entropy on output membrane, summed over all time steps
+    (paper: 'Cross-entropy loss is computed across all time steps, summing
+    up to form the total loss')."""
+    out_mem, out_spikes = forward(
+        params, spikes, cfg, train=train, dropout_key=dropout_key
+    )
+    logp = jax.nn.log_softmax(out_mem, axis=-1)  # (T, B, C)
+    onehot = jax.nn.one_hot(labels, out_mem.shape[-1])
+    ce_per_step = -jnp.sum(onehot[None] * logp, axis=-1)  # (T, B)
+    loss = jnp.mean(jnp.sum(ce_per_step, axis=0))
+    counts = jnp.sum(out_spikes, axis=0)  # (B, C)
+    # tie-break by membrane sum so all-zero-spike batches still predict
+    pred = jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
+    acc = jnp.mean((pred == labels).astype(jnp.float32))
+    return loss, {"accuracy": acc, "spike_rate": jnp.mean(out_spikes)}
+
+
+def predict(params, images: Array, cfg: SNNConfig, key: jax.Array) -> Array:
+    """End-to-end inference: rate-encode + forward + spike-count argmax."""
+    flat = images.reshape(images.shape[0], -1)
+    spikes = coding.rate_encode(key, flat, cfg.num_steps)
+    out_mem, out_spikes = forward(params, spikes, cfg, train=False)
+    counts = jnp.sum(out_spikes, axis=0)
+    return jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
+
+
+def hidden_spike_rates(params, spikes: Array, cfg: SNNConfig) -> Array:
+    """Mean per-layer spike rates — feeds the event-driven energy model."""
+    ncfg = cfg.neuron_cfg
+    B = spikes.shape[1]
+    n_layers = cfg.num_layers
+    states = [
+        neuron.init_state((B, cfg.layer_sizes[i + 1])) for i in range(n_layers)
+    ]
+
+    def step(carry, x_t):
+        states = carry
+        new_states, rates = [], []
+        h = x_t
+        for i in range(n_layers):
+            lp = params[f"layer{i}"]
+            cur = h @ lp["w"] + lp["b"]
+            st, spk = neuron.neuron_step(
+                ncfg, states[i], cur,
+                beta=effective_beta(lp), threshold=lp["threshold"],
+            )
+            new_states.append(st)
+            rates.append(jnp.mean(spk))
+            h = spk
+        return tuple(new_states), jnp.stack(rates)
+
+    _, rates = jax.lax.scan(step, tuple(states), spikes)
+    return jnp.mean(rates, axis=0)  # (n_layers,)

@@ -1,0 +1,85 @@
+"""Surrogate-gradient spike functions.
+
+The Heaviside spike nonlinearity has zero gradient almost everywhere; SNN
+training (snntorch-style BPTT, as used by the paper) replaces the backward
+pass with a smooth surrogate.  Forward is always the exact hard threshold —
+only the VJP is surrogate.
+
+Provided surrogates (all as `jax.custom_vjp`):
+  - ``atan``        : snntorch default for Leaky.  d/du = alpha / (2*(1+(pi/2*alpha*u)^2))
+  - ``fast_sigmoid``: d/du = 1 / (slope*|u| + 1)^2
+  - ``boxcar``      : straight-through estimator, d/du = 1[|u| < width/2]
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _heaviside(u: Array) -> Array:
+    """Exact spike forward: 1.0 where u >= 0 (u is membrane - threshold)."""
+    return (u >= 0.0).astype(u.dtype)
+
+
+def _make_spike_fn(grad_fn: Callable[[Array], Array]) -> Callable[[Array], Array]:
+    @jax.custom_vjp
+    def spike(u: Array) -> Array:
+        return _heaviside(u)
+
+    def fwd(u: Array):
+        return _heaviside(u), u
+
+    def bwd(u: Array, g: Array):
+        return (g * grad_fn(u),)
+
+    spike.defvjp(fwd, bwd)
+    return spike
+
+
+def atan(alpha: float = 2.0) -> Callable[[Array], Array]:
+    """ATan surrogate (snntorch default)."""
+
+    def grad_fn(u: Array) -> Array:
+        return alpha / (2.0 * (1.0 + (math.pi / 2.0 * alpha * u) ** 2))
+
+    return _make_spike_fn(grad_fn)
+
+
+def fast_sigmoid(slope: float = 25.0) -> Callable[[Array], Array]:
+    """Fast-sigmoid surrogate (SuperSpike)."""
+
+    def grad_fn(u: Array) -> Array:
+        return 1.0 / (slope * jnp.abs(u) + 1.0) ** 2
+
+    return _make_spike_fn(grad_fn)
+
+
+def boxcar(width: float = 1.0) -> Callable[[Array], Array]:
+    """Straight-through / boxcar surrogate."""
+
+    def grad_fn(u: Array) -> Array:
+        return (jnp.abs(u) < width / 2.0).astype(u.dtype)
+
+    return _make_spike_fn(grad_fn)
+
+
+_REGISTRY = {
+    "atan": atan,
+    "fast_sigmoid": fast_sigmoid,
+    "boxcar": boxcar,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def get(name: str, **kwargs) -> Callable[[Array], Array]:
+    """Look up a surrogate spike fn by name (kwargs must be hashable)."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown surrogate {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)

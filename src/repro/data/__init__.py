@@ -1,0 +1,3 @@
+from repro.data import collision, tokens
+
+__all__ = ["collision", "tokens"]

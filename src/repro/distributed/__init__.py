@@ -1,0 +1,3 @@
+from repro.distributed import compression, partitioning, pipeline
+
+__all__ = ["compression", "partitioning", "pipeline"]

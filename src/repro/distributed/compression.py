@@ -1,0 +1,92 @@
+"""Gradient compression with error feedback (cross-pod DP all-reduce).
+
+At 1000+ nodes the cross-pod (DCN) gradient all-reduce dominates step
+time for DP-heavy profiles.  This module provides int8 quantize ->
+all-reduce -> dequantize with *error feedback* (Seide et al. 2014;
+1-bit-Adam lineage): the quantization residual is carried into the next
+step, so convergence matches uncompressed SGD/Adam to first order
+(property-tested in tests/test_compression.py).
+
+This is also the paper's Q-format idea applied at the *gradient* level:
+gradients are Q1.7-coded per-tensor (symmetric max-scale int8), 4x fewer
+bytes on the wire than f32.
+
+Usage: wrap the optimizer —
+    opt = compressed(adam(1e-3), axis="pod")     # inside shard_map
+or use `compress/decompress` directly around a manual psum.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import Optimizer
+
+PyTree = Any
+
+
+class CompressedState(NamedTuple):
+    inner: Any
+    error: PyTree  # error-feedback residual, same structure as grads
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (codes, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: PyTree, error: PyTree) -> Tuple[PyTree, PyTree]:
+    """Quantize (grads + carried error); returns (quantized_float, new_error).
+
+    The returned tree is float32 (already dequantized) so it can feed any
+    all-reduce; the wire format in a real deployment is (codes, scale).
+    """
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        codes, scale = quantize_int8(g32)
+        deq = dequantize_int8(codes, scale)
+        return deq, g32 - deq
+
+    flat = jax.tree_util.tree_map(one, grads, error)
+    deq = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return deq, err
+
+
+def compressed(opt: Optimizer, psum_axis: Optional[str] = None) -> Optimizer:
+    """Error-feedback int8 compression in front of an optimizer.
+
+    If `psum_axis` is given the compressed grads are jax.lax.pmean'd over
+    that axis (for use inside shard_map over the pod axis); otherwise the
+    caller is responsible for the reduction (jit + sharding path).
+    """
+
+    def init(params):
+        err = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+        )
+        return CompressedState(inner=opt.init(params), error=err)
+
+    def update(grads, state: CompressedState, params=None):
+        deq, err = compress_tree(grads, state.error)
+        if psum_axis is not None:
+            deq = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, psum_axis), deq
+            )
+        updates, inner = opt.update(deq, state.inner, params)
+        return updates, CompressedState(inner=inner, error=err)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (+ jnp oracles).
+
+- lif_fused:    fused multi-step LIF neuron dynamics (VMEM-resident state)
+- spike_matmul: event-driven binary-spike integration (cascaded adder)
+- q115_matmul:  Q1.15 fixed-point matmul, int32 (28-bit-class) accumulator
+- ops:          public wrappers (interpret on CPU, Mosaic on TPU)
+- ref:          pure-jnp oracles, the correctness contract for every kernel
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

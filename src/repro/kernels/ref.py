@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` implements the exact semantics the kernel must match.
+Kernel tests sweep shapes/dtypes and assert allclose (bit-exact for the
+integer paths) against these.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+Q115_FRAC_BITS = 15
+
+
+def lif_fused_ref(
+    currents: Array,  # (T, B, N) float32 input currents
+    beta: Array,  # (N,) float32 decay
+    threshold: Array,  # (N,) float32 firing threshold
+    *,
+    refractory_steps: int = 0,
+    reset: str = "zero",
+) -> Tuple[Array, Array]:
+    """Multi-step LIF dynamics; returns (spikes (T,B,N), final_u (B,N)).
+
+    Semantics identical to core.neuron.neuron_step (inference: hard
+    threshold, no surrogate), scanned over T.
+    """
+    T, B, N = currents.shape
+
+    def body(carry, cur_t):
+        u, refrac = carry
+        u_pre = beta[None, :] * u + cur_t
+        raw = (u_pre >= threshold[None, :]).astype(jnp.float32)
+        if refractory_steps > 0:
+            can = (refrac <= 0).astype(jnp.float32)
+            spk = raw * can
+            refrac = jnp.where(
+                spk > 0, jnp.int32(refractory_steps), jnp.maximum(refrac - 1, 0)
+            )
+        else:
+            spk = raw
+        if reset == "zero":
+            u_next = u_pre * (1.0 - spk)
+        elif reset == "subtract":
+            u_next = u_pre - threshold[None, :] * spk
+        else:
+            raise ValueError(reset)
+        return (u_next, refrac), spk
+
+    u0 = jnp.zeros((B, N), jnp.float32)
+    r0 = jnp.zeros((B, N), jnp.int32)
+    (u_fin, _), spikes = jax.lax.scan(body, (u0, r0), currents)
+    return spikes, u_fin
+
+
+def spike_matmul_ref(
+    spikes: Array,  # (M, K) int8 in {0, 1}
+    weights_q: Array,  # (K, N) int16 Q1.15 codes
+) -> Array:
+    """Event-driven synaptic integration (cascaded-adder semantics).
+
+    Exact integer accumulation: out[m, n] = sum_k spikes[m,k] * wq[k,n],
+    in int32 (the paper's 28-bit intermediate fits: 16 + log2(K) bits).
+    """
+    return jax.lax.dot_general(
+        spikes.astype(jnp.int32),
+        weights_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def q115_matmul_ref(x_q: Array, w_q: Array) -> Array:
+    """Q1.15 fixed-point matmul: int16 x int16 -> int32 accum -> round-to-
+    nearest shift >>15 -> saturate int16.  Bit-exact contract."""
+    # Dataflow matches the FPGA contract (paper §4.3): Q1.15 x Q1.15
+    # products are rescaled back to Q1.15 (>>15, round-to-nearest) BEFORE
+    # accumulation, so a fan-in-4096 sum needs 16 + log2(4096) = 28 bits —
+    # exactly the paper's "28-bit intermediate result".  Accumulating raw
+    # Q2.30 products instead would need 42 bits and overflow int32.
+    prod = x_q.astype(jnp.int32)[:, :, None] * w_q.astype(jnp.int32)[None, :, :]
+    prod = (prod + (1 << (Q115_FRAC_BITS - 1))) >> Q115_FRAC_BITS
+    acc = jnp.sum(prod, axis=1)
+    out = jnp.clip(acc, -(2**15), 2**15 - 1).astype(jnp.int16)
+    return out
+
+
+def q115_matmul_acc_ref(x_q: Array, w_q: Array) -> Array:
+    """Raw int32 accumulator variant (products >>15 then summed), pre-clip.
+
+    This is the value the kernel accumulates; exposed for tests.
+    """
+    prod = x_q.astype(jnp.int32)[:, :, None] * w_q.astype(jnp.int32)[None, :, :]
+    prod = (prod + (1 << (Q115_FRAC_BITS - 1))) >> Q115_FRAC_BITS
+    return jnp.sum(prod, axis=1).astype(jnp.int32)

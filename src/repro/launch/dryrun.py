@@ -1,0 +1,620 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+512 placeholder devices and extract the roofline terms.
+
+The two lines above MUST stay first — jax locks device count on first
+init, and only this entry point may see 512 devices (tests/benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 cells x 2 meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  ... --variant q115            # §Perf quantized variant
+  ... --override heads=         # §Perf sharding-rule override
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>[__<tag>].json
+(incremental: existing files are skipped unless --force), containing
+memory_analysis, cost_analysis, parsed per-collective traffic and the
+three roofline terms (TPU v5e constants).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed import partitioning
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import adam, chain_clip
+from repro.train.loop import TrainState, make_train_step
+
+# ----------------------------------------------------------- constants
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from post-SPMD optimized HLO.
+
+    Traffic model (ring algorithms, per participating device):
+      all-gather:         result_bytes * (g-1)/g
+      reduce-scatter:     result_bytes * (g-1)        (~input bytes)
+      all-reduce:         2 * result_bytes * (g-1)/g  (RS + AG)
+      all-to-all:         result_bytes * (g-1)/g
+      collective-permute: result_bytes
+    """
+    ops: Dict[str, Dict[str, float]] = {}
+    total_traffic = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        g = None
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len(gb.group(1).split(","))
+        if not g or g <= 1:
+            traffic = size if kind == "collective-permute" else 0.0
+        elif kind == "all-gather":
+            traffic = size * (g - 1) / g
+        elif kind == "reduce-scatter":
+            traffic = size * (g - 1)
+        elif kind == "all-reduce":
+            traffic = 2.0 * size * (g - 1) / g
+        elif kind == "all-to-all":
+            traffic = size * (g - 1) / g
+        else:  # collective-permute
+            traffic = size
+        rec = ops.setdefault(
+            kind, {"count": 0, "result_bytes": 0.0, "traffic_bytes": 0.0}
+        )
+        rec["count"] += 1
+        rec["result_bytes"] += size
+        rec["traffic_bytes"] += traffic
+        total_traffic += traffic
+    return {"ops": ops, "traffic_bytes": total_traffic}
+
+
+# ----------------------------------------------------------- cell build
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*D (fwd-only)."""
+    sp = shp.SHAPES[shape_name]
+    model = Model(cfg)
+    n_active = model.active_param_count()
+    if sp.kind == "train":
+        tokens = sp.global_batch * sp.seq_len
+        return 6.0 * n_active * tokens
+    if sp.kind == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        return 2.0 * n_active * tokens
+    tokens = sp.global_batch  # one token per sequence
+    return 2.0 * n_active * tokens
+
+
+def build_lowered(
+    cfg,
+    shape_name: str,
+    mesh,
+    rules: Optional[partitioning.PartitionRules] = None,
+    accum_steps: int = 1,
+):
+    """Lower the cell's step function with production shardings."""
+    model = Model(cfg)
+    params_shapes, axes = model.abstract()
+    rules = rules or partitioning.PartitionRules()
+    param_sh = partitioning.tree_shardings(params_shapes, axes, mesh, rules)
+    kind, inputs, in_axes = shp.batch_specs(cfg, shape_name)
+    input_sh = partitioning.tree_shardings(inputs, in_axes, mesh, rules)
+    repl = partitioning.replicated(mesh)
+
+    if kind == "train":
+        opt = chain_clip(adam(5e-4), 1.0)
+        opt_shapes = jax.eval_shape(opt.init, params_shapes)
+        opt_sh = partitioning.opt_state_specs(opt_shapes, param_sh, mesh)
+        step = make_train_step(model, opt, accum_steps=accum_steps)
+        state_shapes = TrainState(
+            params_shapes, opt_shapes, jax.ShapeDtypeStruct((), jnp.int32)
+        )
+        state_sh = TrainState(param_sh, opt_sh, repl)
+        jf = jax.jit(
+            step,
+            in_shardings=(state_sh, input_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        return jf.lower(state_shapes, inputs)
+
+    if kind == "prefill":
+        sp = shp.SHAPES[shape_name]
+        cache_shapes = model.abstract_cache(sp.global_batch, sp.seq_len)
+        cache_axes = partitioning.cache_logical_axes(cache_shapes)
+        cache_sh = partitioning.tree_shardings(
+            cache_shapes, cache_axes, mesh, rules
+        )
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, sp.seq_len)
+
+        jf = jax.jit(
+            prefill_fn,
+            in_shardings=(param_sh, input_sh),
+            out_shardings=(None, cache_sh),
+        )
+        return jf.lower(params_shapes, inputs)
+
+    # decode
+    sp = shp.SHAPES[shape_name]
+    cache_shapes = model.abstract_cache(sp.global_batch, sp.seq_len)
+    cache_axes = partitioning.cache_logical_axes(cache_shapes)
+    cache_sh = partitioning.tree_shardings(
+        cache_shapes, cache_axes, mesh, rules
+    )
+    jf = jax.jit(
+        model.decode_step,
+        in_shardings=(
+            param_sh, input_sh["token"], input_sh["pos"], cache_sh,
+        ),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(3,),
+    )
+    return jf.lower(
+        params_shapes, inputs["token"], inputs["pos"], cache_shapes
+    )
+
+
+def _pattern_len(cfg) -> int:
+    from repro.models import transformer
+
+    plan = transformer.layer_plan(cfg)
+    return len(plan[0][1])
+
+
+def _cost_point(cfg, n_layers: int, shape_name: str, mesh, rules):
+    """Compile an unrolled reduced-depth variant and return raw costs.
+
+    XLA's cost_analysis counts a while-loop body ONCE (verified on this
+    jax/XLA build), so scanned-layer compiles undercount flops/bytes/
+    collectives by the trip count.  Cost extraction therefore compiles
+    *unrolled* stacks at two depths and the caller differences them.
+    """
+    cfg_c = dataclasses.replace(
+        cfg, num_layers=n_layers, scan_layers=False, attn_chunk_unroll=True
+    )
+    with partitioning.activation_sharding(mesh, rules):
+        lowered = build_lowered(cfg_c, shape_name, mesh, rules)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": colls,
+    }
+
+
+def _extrapolate(c1, c2, l1: int, l2: int, L: int) -> Dict[str, Any]:
+    """Two-point linear extrapolation in depth: cost(L) = base + L*slope."""
+
+    def lin(v1, v2):
+        slope = (v2 - v1) / (l2 - l1)
+        return max(v1 + slope * (L - l1), 0.0)
+
+    ops = {}
+    kinds = set(c1["collectives"]["ops"]) | set(c2["collectives"]["ops"])
+    zero = {"count": 0, "result_bytes": 0.0, "traffic_bytes": 0.0}
+    for k in kinds:
+        o1 = c1["collectives"]["ops"].get(k, zero)
+        o2 = c2["collectives"]["ops"].get(k, zero)
+        ops[k] = {
+            f: lin(o1[f], o2[f]) for f in ("count", "result_bytes", "traffic_bytes")
+        }
+    return {
+        "flops": lin(c1["flops"], c2["flops"]),
+        "bytes": lin(c1["bytes"], c2["bytes"]),
+        "collectives": {
+            "ops": ops,
+            "traffic_bytes": lin(
+                c1["collectives"]["traffic_bytes"],
+                c2["collectives"]["traffic_bytes"],
+            ),
+        },
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    variant: Optional[str] = None,
+    rule_overrides: Optional[Dict[str, tuple]] = None,
+    mesh_override=None,
+    cfg_override=None,
+    accum_steps: int = 1,
+) -> Dict[str, Any]:
+    cfg = cfg_override or configs.get(arch)
+    if variant in ("q115", "q115_int", "q1_7_int"):
+        cfg = dataclasses.replace(cfg, quant=variant)
+    elif variant == "kvq":
+        cfg = dataclasses.replace(cfg, kv_cache_quant=True)
+    elif variant and variant.startswith("combo:"):
+        # e.g. combo:q1_7_int+kvq
+        parts = variant.split(":", 1)[1].split("+")
+        kw = {}
+        if "kvq" in parts:
+            kw["kv_cache_quant"] = True
+        for p_ in parts:
+            if p_ != "kvq":
+                kw["quant"] = p_
+        cfg = dataclasses.replace(cfg, **kw)
+    ok, reason = shp.runnable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    if mesh_override is not None:
+        mesh = mesh_override
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rules = partitioning.PartitionRules()
+    if rule_overrides:
+        rules = rules.override(**rule_overrides)
+
+    # 1) full-depth scanned compile: proves shardability + memory fit
+    # (grad-accum applies here — the memory truth; cost points below use
+    # accum=1 so the microbatch scan body is not undercounted)
+    t0 = time.time()
+    with partitioning.activation_sharding(mesh, rules):
+        lowered = build_lowered(
+            cfg, shape_name, mesh, rules, accum_steps=accum_steps
+        )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+
+    # 2) cost extraction via two-point depth differencing (unrolled)
+    plen = _pattern_len(cfg)
+    l1, l2 = plen, 3 * plen
+    c1 = _cost_point(cfg, l1, shape_name, mesh, rules)
+    c2 = _cost_point(cfg, l2, shape_name, mesh, rules)
+    ext = _extrapolate(c1, c2, l1, l2, cfg.num_layers)
+
+    flops_dev = ext["flops"]
+    bytes_dev = ext["bytes"]
+    colls = ext["collectives"]
+    traffic_dev = float(colls["traffic_bytes"])
+    compute_term = flops_dev / PEAK_FLOPS
+    memory_term = bytes_dev / HBM_BW
+    collective_term = traffic_dev / LINK_BW
+    terms = {
+        "compute_s": compute_term,
+        "memory_s": memory_term,
+        "collective_s": collective_term,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_name)
+    mf_dev = mf / n_chips
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "accum_steps": accum_steps,
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_live_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+            "method": f"two-point depth differencing (unrolled L={l1},{l2})",
+        },
+        "collectives": colls,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+            "model_flops_global": mf,
+            "model_flops_per_device": mf_dev,
+            "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+        },
+    }
+    return result
+
+
+ALL_SHAPES = list(shp.SHAPES)
+
+
+# ------------------------------------------------- paper's own SNN at scale
+def run_snn_cell(mesh_kind: str) -> Dict[str, Any]:
+    """11th config: the paper's 4096-512-2 LIF SNN train step sharded on
+    the production mesh (batch DP over (pod, data), hidden-layer TP over
+    model) — the paper's technique as a first-class distributed feature.
+
+    Global batch 16384 rate-coded 64x64 images x 25 time steps.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import snn as snn_mod
+    from repro.configs.collision_snn import CONFIG as SNN_CFG
+    from repro.optim import adam as adam_opt, chain_clip
+    from repro.optim.adam import apply_updates
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    rules = partitioning.PartitionRules()
+    B_GLOBAL = 16384
+    cfg = SNN_CFG
+
+    def init_fn(key):
+        return snn_mod.init_params(key, cfg)
+
+    params_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    # logical axes: w (fan_in, fan_out) -> hidden dims TP over model
+    axes = {
+        name: {
+            "w": ("snn_in" if i == 0 else "snn_hidden",
+                  "snn_hidden" if i == 0 else "snn_out"),
+            "b": ("snn_hidden" if i == 0 else "snn_out",),
+            "beta_raw": ("snn_hidden" if i == 0 else "snn_out",),
+            "threshold": ("snn_hidden" if i == 0 else "snn_out",),
+        }
+        for i, name in enumerate(["layer0", "layer1"])
+    }
+    rules = rules.override(
+        snn_in=("data",), snn_hidden=("model",), snn_out=()
+    )
+    param_sh = partitioning.tree_shardings(params_shapes, axes, mesh, rules)
+    opt = chain_clip(adam_opt(5e-4), 1.0)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    opt_sh = partitioning.opt_state_specs(opt_shapes, param_sh, mesh)
+    repl = partitioning.replicated(mesh)
+
+    spikes_sds = jax.ShapeDtypeStruct(
+        (cfg.num_steps, B_GLOBAL, cfg.layer_sizes[0]), jnp.float32
+    )
+    labels_sds = jax.ShapeDtypeStruct((B_GLOBAL,), jnp.int32)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    spikes_sh = partitioning.tree_shardings(
+        {"s": spikes_sds}, {"s": ("act_seq", "batch", "snn_in")}, mesh, rules
+    )["s"]
+    labels_sh = partitioning.tree_shardings(
+        {"l": labels_sds}, {"l": ("batch",)}, mesh, rules
+    )["l"]
+
+    def train_step(params, opt_state, spikes, labels, key):
+        (loss, aux), grads = jax.value_and_grad(
+            snn_mod.loss_fn, has_aux=True
+        )(params, spikes, labels, cfg, train=True, dropout_key=key)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss, aux
+
+    t0 = time.time()
+    with partitioning.activation_sharding(mesh, rules):
+        lowered = jax.jit(
+            train_step,
+            in_shardings=(param_sh, opt_sh, spikes_sh, labels_sh, repl),
+            out_shardings=(param_sh, opt_sh, repl, repl),
+            donate_argnums=(0, 1),
+        ).lower(
+            params_shapes, opt_shapes, spikes_sds, labels_sds, key_sds
+        )
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    colls = parse_collectives(compiled.as_text())
+    flops_dev = float(ca.get("flops", 0.0))
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": float(colls["traffic_bytes"]) / LINK_BW,
+    }
+    n_params = sum(
+        int(jnp.prod(jnp.asarray(l.shape)))
+        for l in jax.tree_util.tree_leaves(params_shapes)
+    )
+    # SNN model flops: T steps x (fwd 2*N*B) x 3 (train) — time scan is a
+    # while loop, so apply the same trip-count correction analytically
+    mf_dev = 6.0 * n_params * B_GLOBAL * cfg.num_steps / n_chips
+    return {
+        "arch": "collision-snn", "shape": "train_16k_batch",
+        "mesh": mesh_kind, "status": "ok", "chips": n_chips,
+        "compile_s": round(t_compile, 2),
+        "note": (
+            "cost_analysis counts the 25-step time scan once; terms below "
+            "are raw (x25 for true per-step totals)"
+        ),
+        "memory_analysis": {
+            "peak_live_bytes": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "cost_analysis": {
+            "flops_per_device": flops_dev,
+            "bytes_per_device": bytes_dev,
+        },
+        "collectives": colls,
+        "roofline": {
+            **terms,
+            "dominant": max(terms, key=terms.get),
+            "model_flops_per_device": mf_dev,
+        },
+    }
+
+
+def cell_path(outdir, arch, shape, mesh_kind, tag):
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(outdir, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=ALL_SHAPES + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument(
+        "--variant", default=None,
+        help="q115: fake-quant QAT; q115_int/q1_7_int: true int weight "
+        "storage; kvq: int8 KV cache; combo:<a>+<b> to compose",
+    )
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="e.g. 32,8 — §Perf mesh remap within the pod")
+    ap.add_argument("--mesh-axes", default="data,model")
+    ap.add_argument(
+        "--override", action="append", default=[],
+        help="logical=axis1+axis2 partitioning-rule override (axis empty -> replicate)",
+    )
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = configs.ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes_ = ALL_SHAPES if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = tuple(a for a in v.split("+") if a)
+    tag = args.tag or (args.variant if args.variant else None)
+    if overrides and not tag:
+        tag = "override"
+    mesh_override = None
+    if args.mesh_shape:
+        from repro.launch.mesh import make_production_mesh as _mpm
+
+        shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        axes = tuple(args.mesh_axes.split(","))
+        mesh_override = _mpm(shape=shape, axes=axes)
+        if not tag:
+            tag = f"mesh{'x'.join(map(str, shape))}"
+
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = []
+    if args.arch == "collision-snn":
+        for mesh_kind in meshes:
+            res = run_snn_cell(mesh_kind)
+            path = os.path.join(
+                args.outdir, f"collision-snn__train__{mesh_kind}.json"
+            )
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            r = res["roofline"]
+            print(
+                f"collision-snn x {mesh_kind}: ok compile={res['compile_s']}s "
+                f"compute={r['compute_s']*1e3:.2f}ms "
+                f"memory={r['memory_s']*1e3:.2f}ms "
+                f"coll={r['collective_s']*1e3:.2f}ms "
+                f"peak={res['memory_analysis']['peak_live_bytes']/2**30:.2f}GiB"
+            )
+        return
+    for arch in archs:
+        for shape_name in shapes_:
+            for mesh_kind in meshes:
+                path = cell_path(args.outdir, arch, shape_name, mesh_kind, tag)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {path}")
+                    continue
+                print(f"[cell] {arch} x {shape_name} x {mesh_kind}", flush=True)
+                try:
+                    res = run_cell(
+                        arch, shape_name, mesh_kind,
+                        variant=args.variant,
+                        rule_overrides=overrides or None,
+                        mesh_override=mesh_override,
+                    )
+                except Exception as e:  # noqa
+                    traceback.print_exc()
+                    res = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                    }
+                    failures.append((arch, shape_name, mesh_kind, str(e)))
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                if res["status"] == "ok":
+                    r = res["roofline"]
+                    print(
+                        f"   ok: compile={res['compile_s']}s "
+                        f"compute={r['compute_s']*1e3:.2f}ms "
+                        f"memory={r['memory_s']*1e3:.2f}ms "
+                        f"coll={r['collective_s']*1e3:.2f}ms "
+                        f"dom={r['dominant']} "
+                        f"useful={r['useful_flops_ratio']:.2f}",
+                        flush=True,
+                    )
+                elif res["status"] == "skipped":
+                    print(f"   {res['reason']}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f_ in failures:
+            print("  ", f_)
+        sys.exit(1)
+    print("\ndry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Assigned input shapes and per-(arch x shape) input specs.
+
+Four LM shapes (assignment):
+  train_4k    : seq 4096,   global batch 256   -> train_step
+  prefill_32k : seq 32768,  global batch 32    -> prefill
+  decode_32k  : seq 32768,  global batch 128   -> serve_step (1 new token)
+  long_500k   : seq 524288, global batch 1     -> serve_step; only runnable
+                for sub-quadratic archs (SSM / hybrid / SWA) — skips are
+                recorded, per DESIGN.md §5.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct pytrees plus logical
+axes for every model input — weak-type-correct, shardable, no allocation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import CLIP_EMBED_DIM, Model
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def runnable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for an (arch, shape) cell."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, "skip(full-attn): 500k decode needs sub-quadratic attention"
+    return True, ""
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int):
+    if cfg.num_codebooks:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStructs + logical axes for the given cell's inputs.
+
+    Returns (kind, inputs, axes); `inputs` matches the signature of the
+    lowered function's data argument(s).
+    """
+    sp = SHAPES[shape_name]
+    B, L = sp.global_batch, sp.seq_len
+
+    if sp.kind == "train":
+        L_text = L - cfg.num_image_tokens
+        tok = SDS(_token_shape(cfg, B, L_text), jnp.int32)
+        inputs = {"tokens": tok, "targets": tok}
+        axes = {
+            "tokens": ("batch", "act_seq") + (("codebook",) if cfg.num_codebooks else ()),
+            "targets": ("batch", "act_seq") + (("codebook",) if cfg.num_codebooks else ()),
+        }
+        if cfg.num_image_tokens:
+            inputs["img_embeds"] = SDS(
+                (B, cfg.num_image_tokens, CLIP_EMBED_DIM), jnp.bfloat16
+            )
+            axes["img_embeds"] = ("batch", "act_seq", "clip")
+        return "train", inputs, axes
+
+    if sp.kind == "prefill":
+        L_text = L - cfg.num_image_tokens
+        tok = SDS(_token_shape(cfg, B, L_text), jnp.int32)
+        inputs = {"tokens": tok}
+        axes = {
+            "tokens": ("batch", "act_seq") + (("codebook",) if cfg.num_codebooks else ()),
+        }
+        if cfg.num_image_tokens:
+            inputs["img_embeds"] = SDS(
+                (B, cfg.num_image_tokens, CLIP_EMBED_DIM), jnp.bfloat16
+            )
+            axes["img_embeds"] = ("batch", "act_seq", "clip")
+        return "prefill", inputs, axes
+
+    # decode: one new token against a cache of length L
+    tok = SDS(_token_shape(cfg, B, 1), jnp.int32)
+    inputs = {
+        "token": tok,
+        "pos": SDS((B,), jnp.int32),
+    }
+    axes = {
+        "token": ("batch", "act_seq") + (("codebook",) if cfg.num_codebooks else ()),
+        "pos": ("batch",),
+    }
+    return "decode", inputs, axes
+
+
+def abstract_cache(cfg: ModelConfig, shape_name: str):
+    sp = SHAPES[shape_name]
+    model = Model(cfg)
+    return model.abstract_cache(sp.global_batch, sp.seq_len)

@@ -1,0 +1,99 @@
+"""Training launcher: any assigned arch (reduced or full) or the paper's
+SNN, with checkpoint/restart, straggler watchdog and host-mesh sharding.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --reduced --steps 50 --ckpt /tmp/ckpt --resume auto
+
+On a real TPU pod this same entry point runs under
+`make_production_mesh()`; on this CPU container it uses the host mesh
+(1 device) with identical code paths — the production mesh is exercised
+by launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.data.tokens import MarkovTokenStream, TokenStreamConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import CLIP_EMBED_DIM, Model
+from repro.optim import adamw, chain_clip, warmup_cosine
+from repro.train.loop import Trainer
+
+
+def batches(cfg, batch_size, seq_len):
+    stream = MarkovTokenStream(
+        TokenStreamConfig(
+            vocab_size=cfg.vocab_size, seq_len=seq_len, batch_size=batch_size
+        )
+    )
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    for x, y in stream.batches():
+        if cfg.num_codebooks:
+            x = np.stack([x] * cfg.num_codebooks, -1)
+            y = np.stack([y] * cfg.num_codebooks, -1)
+        b = {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
+        if cfg.num_image_tokens:
+            b["img_embeds"] = jnp.asarray(
+                rng.normal(0, 1, (batch_size, cfg.num_image_tokens,
+                                  CLIP_EMBED_DIM)).astype(np.float32)
+            )
+        yield b
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default="auto", choices=["auto", "never"])
+    ap.add_argument("--quant", default=None, choices=[None, "q115"])
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.quant:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, quant=args.quant)
+    model = Model(cfg)
+    print(f"arch={args.arch} params={model.param_count()/1e6:.1f}M "
+          f"(active {model.active_param_count()/1e6:.1f}M)")
+
+    opt = chain_clip(
+        adamw(warmup_cosine(args.lr, 10, max(args.steps, 11))), 1.0
+    )
+    trainer = Trainer(
+        model, opt, ckpt_dir=args.ckpt, ckpt_every=25, accum_steps=args.accum
+    )
+    if args.ckpt and args.resume == "auto":
+        state = trainer.restore_or_init(jax.random.PRNGKey(0))
+        if int(state.step):
+            print(f"resumed at step {int(state.step)}")
+    else:
+        state = trainer.init_state(jax.random.PRNGKey(0))
+
+    mesh = make_host_mesh()
+    with mesh:
+        state, metrics = trainer.run(
+            state, batches(cfg, args.batch, args.seq), args.steps
+        )
+    print("final:", metrics)
+
+
+if __name__ == "__main__":
+    main()

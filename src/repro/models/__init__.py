@@ -1,0 +1,6 @@
+from repro.models import attention, config, griffin, layers, model, moe, ssm, transformer
+
+__all__ = [
+    "attention", "config", "griffin", "layers", "model", "moe", "ssm",
+    "transformer",
+]

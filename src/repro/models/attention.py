@@ -1,0 +1,443 @@
+"""Attention: GQA/MHA/MQA with full, sliding-window and chunked (online-
+softmax, flash-style) implementations, plus MLA (multi-head latent
+attention, MiniCPM3/DeepSeek-style) — with KV caches for serving.
+
+Cache formats
+  full cache : k/v (B, S_max, Kv, D) — dense archs; entries written at
+               their absolute position.
+  ring cache : k/v (B, W, Kv, D) for SWA/local-attention archs — slot =
+               pos % W, so a 500k-token decode holds only W entries.
+  mla cache  : c_kv (B, S, r) + k_rope (B, S, dr) — compressed latents.
+
+Keys are stored rope-applied (absolute positions), the standard serving
+layout.  All softmax math in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ================================================================ params
+def gqa_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    H, Kv, D, E = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["wq"], a["wq"] = layers.dense_init(
+        ks[0], (E, H, D), ("embed", "heads", "head_dim"), dtype
+    )
+    p["wk"], a["wk"] = layers.dense_init(
+        ks[1], (E, Kv, D), ("embed", "kv", "head_dim"), dtype
+    )
+    p["wv"], a["wv"] = layers.dense_init(
+        ks[2], (E, Kv, D), ("embed", "kv", "head_dim"), dtype
+    )
+    p["wo"], a["wo"] = layers.dense_init(
+        ks[3], (H, D, E), ("heads", "head_dim", "embed"), dtype, fan_in_dims=2
+    )
+    if cfg.qkv_bias:
+        p["bq"], a["bq"] = jnp.zeros((H, D), dtype), ("heads", "head_dim")
+        p["bk"], a["bk"] = jnp.zeros((Kv, D), dtype), ("kv", "head_dim")
+        p["bv"], a["bv"] = jnp.zeros((Kv, D), dtype), ("kv", "head_dim")
+    return p, a
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    E, H = cfg.d_model, cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["q_a"], a["q_a"] = layers.dense_init(ks[0], (E, r_q), ("embed", "q_rank"), dtype)
+    p["q_norm"], a["q_norm"] = jnp.ones((r_q,), dtype), ("q_rank",)
+    p["q_b"], a["q_b"] = layers.dense_init(
+        ks[1], (r_q, H, dn + dr), ("q_rank", "heads", "head_dim"), dtype
+    )
+    p["kv_a"], a["kv_a"] = layers.dense_init(
+        ks[2], (E, r_kv + dr), ("embed", "kv_rank"), dtype
+    )
+    p["kv_norm"], a["kv_norm"] = jnp.ones((r_kv,), dtype), ("kv_rank",)
+    p["kv_b"], a["kv_b"] = layers.dense_init(
+        ks[3], (r_kv, H, dn + dv), ("kv_rank", "heads", "head_dim"), dtype
+    )
+    p["wo"], a["wo"] = layers.dense_init(
+        ks[4], (H, dv, E), ("heads", "head_dim", "embed"), dtype, fan_in_dims=2
+    )
+    return p, a
+
+
+# ================================================================ masking
+def _mask(q_pos: Array, kv_pos: Array, window: Optional[int]) -> Array:
+    """(..., Lq, Lk) boolean validity: causal + optional sliding window +
+    kv_pos >= 0 (ring-buffer slots not yet written have kv_pos < 0)."""
+    m = kv_pos[..., None, :] <= q_pos[..., :, None]
+    m &= kv_pos[..., None, :] >= 0
+    if window is not None:
+        m &= kv_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf**2, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------- int8 KV cache (paper's
+# Q-format applied to attention state: per-(token, head) max-abs scales)
+def kv_quantize(x: Array) -> Tuple[Array, Array]:
+    """(B, S, Kv, D) -> (int8 codes, (B, S, Kv) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = amax / 127.0 + 1e-12
+    codes = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return codes, scale.astype(x.dtype)
+
+
+def kv_dequantize(codes: Array, scale: Array) -> Array:
+    return codes.astype(scale.dtype) * scale[..., None]
+
+
+# ================================================================ attend
+def attend_full(
+    q: Array,  # (B, Lq, Kv, G, D)  (G = H // Kv query groups)
+    k: Array,  # (B, Lk, Kv, D)
+    v: Array,  # (B, Lk, Kv, D)
+    q_pos: Array,  # (B, Lq)
+    kv_pos: Array,  # (B, Lk)
+    *,
+    window: Optional[int],
+    scale: float,
+    softcap: Optional[float] = None,
+) -> Array:
+    scores = jnp.einsum(
+        "blkgd,bskd->bkgls", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = _mask(q_pos, kv_pos, window)[:, None, None]  # (B,1,1,Lq,Lk)
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgls,bskd->blkgd", w, v)
+
+
+def attend_chunked(
+    q: Array,  # (B, Lq, Kv, G, D)
+    k: Array,
+    v: Array,
+    q_pos: Array,
+    kv_pos: Array,
+    *,
+    window: Optional[int],
+    scale: float,
+    chunk: int,
+    softcap: Optional[float] = None,
+    unroll: bool = False,
+) -> Array:
+    """Online-softmax streaming over KV chunks — O(Lq*chunk) live scores.
+
+    Equivalent to attend_full (property-tested); used for long prefill.
+    `unroll=True` replaces the lax.scan with a Python loop (identical
+    math) so dry-run cost_analysis sees every chunk iteration.
+    """
+    B, Lk = k.shape[0], k.shape[1]
+    pad = (-Lk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (Lk + pad) // chunk
+    kc = k.reshape(B, n_chunks, chunk, *k.shape[2:]).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, chunk, *v.shape[2:]).swapaxes(0, 1)
+    pc = kv_pos.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    Bq, Lq, Kv, G, D = q.shape
+    m0 = jnp.full((B, Kv, G, Lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, Lq), jnp.float32)
+    acc0 = jnp.zeros((B, Lq, Kv, G, v.shape[-1]), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i = xs
+        s = jnp.einsum(
+            "blkgd,bskd->bkgls", q, k_i, preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        msk = _mask(q_pos, p_i, window)[:, None, None]
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == NEG_INF)
+        m_safe = jnp.maximum(m_new, -0.9e30)
+        corr = jnp.exp(m - m_safe)
+        p = jnp.exp(s - m_safe[..., None])
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgls,bskd->blkgd", p.astype(v_i.dtype), v_i)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), ()
+
+    if unroll:
+        carry = (m0, l0, acc0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i], pc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kc, vc, pc))
+    l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    return (acc / l).astype(v.dtype)
+
+
+def _attend(q, k, v, q_pos, kv_pos, cfg: ModelConfig, scale: float):
+    window = cfg.window if cfg.attention_kind in ("swa", "local") else None
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "chunked" if k.shape[1] >= 8192 else "full"
+    fn = attend_chunked if impl == "chunked" else attend_full
+    kw = dict(window=window, scale=scale, softcap=cfg.attn_logit_softcap)
+    if impl == "chunked":
+        kw["chunk"] = cfg.attn_chunk
+        kw["unroll"] = cfg.attn_chunk_unroll
+    return fn(q, k, v, q_pos, kv_pos, **kw)
+
+
+# ================================================================ GQA fwd
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    H, Kv = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("ble,ehd->blhd", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("ble,ekd->blkd", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("ble,ekd->blkd", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = constrain(q, ("batch", "act_seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "act_seq", "kv", "head_dim"))
+    v = constrain(v, ("batch", "act_seq", "kv", "head_dim"))
+    q = layers.apply_rope(q, positions, cfg.rope_theta, cfg.rope_pct)
+    k = layers.apply_rope(k, positions, cfg.rope_theta, cfg.rope_pct)
+    return q.reshape(*q.shape[:2], Kv, H // Kv, cfg.head_dim), k, v
+
+
+def gqa_forward(
+    p,
+    x: Array,  # (B, L, E)
+    positions: Array,  # (B, L)
+    cfg: ModelConfig,
+) -> Array:
+    """Training / prefill self-attention (causal, optional SWA)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    scale = cfg.head_dim ** -0.5
+    o = _attend(q, k, v, positions, positions, cfg, scale)
+    o = o.reshape(*x.shape[:2], cfg.num_heads, cfg.head_dim)
+    o = constrain(o, ("batch", "act_seq", "heads", "head_dim"))
+    return jnp.einsum("blhd,hde->ble", o, p["wo"].astype(x.dtype))
+
+
+def gqa_prefill(p, x, positions, cfg: ModelConfig, cache_len: int):
+    """Like gqa_forward but also returns the populated KV cache."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    scale = cfg.head_dim ** -0.5
+    o = _attend(q, k, v, positions, positions, cfg, scale)
+    o = o.reshape(*x.shape[:2], cfg.num_heads, cfg.head_dim)
+    o = constrain(o, ("batch", "act_seq", "heads", "head_dim"))
+    out = jnp.einsum("blhd,hde->ble", o, p["wo"].astype(x.dtype))
+
+    L = x.shape[1]
+    B = x.shape[0]
+    quantized = cfg.kv_cache_quant
+    if quantized:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+    ring = cfg.attention_kind in ("swa", "local") and cfg.window
+    if ring:
+        W = min(cfg.window, cache_len)
+        # keep the last W entries, placed at slot = pos % W
+        take = min(L, W)
+        slots = positions[:, -take:] % W
+        bidx = jnp.arange(B)[:, None]
+
+        def place(t, width=None):
+            c = jnp.zeros((B, W, *t.shape[2:]), t.dtype)
+            return c.at[bidx, slots].set(t[:, -take:])
+
+        if quantized:
+            cache = {"k": place(kq), "v": place(vq),
+                     "k_scale": place(ks), "v_scale": place(vs)}
+        else:
+            cache = {"k": place(k), "v": place(v)}
+    else:
+        def place(t):
+            c = jnp.zeros((B, cache_len, *t.shape[2:]), t.dtype)
+            return jax.lax.dynamic_update_slice(
+                c, t, (0,) * t.ndim
+            )
+
+        if quantized:
+            cache = {"k": place(kq), "v": place(vq),
+                     "k_scale": place(ks), "v_scale": place(vs)}
+        else:
+            cache = {"k": place(k), "v": place(v)}
+    return out, cache
+
+
+def gqa_decode(
+    p,
+    x: Array,  # (B, 1, E)
+    pos: Array,  # (B,) int32 current absolute position
+    cache: Dict[str, Array],
+    cfg: ModelConfig,
+) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step against a full or ring KV cache."""
+    positions = pos[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    ring = cfg.attention_kind in ("swa", "local") and cfg.window
+    S = cache["k"].shape[1]
+    bidx = jnp.arange(x.shape[0])[:, None]
+    if ring:
+        slot = (pos % S)[:, None]
+    else:
+        slot = pos[:, None]
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(kq),
+            "v": cache["v"].at[bidx, slot].set(vq),
+            "k_scale": cache["k_scale"].at[bidx, slot].set(ks),
+            "v_scale": cache["v_scale"].at[bidx, slot].set(vs),
+        }
+        ck = kv_dequantize(new_cache["k"], new_cache["k_scale"])
+        cv = kv_dequantize(new_cache["v"], new_cache["v_scale"])
+    else:
+        ck = cache["k"].at[bidx, slot].set(k)
+        cv = cache["v"].at[bidx, slot].set(v)
+        new_cache = {"k": ck, "v": cv}
+
+    if ring:
+        # reconstruct absolute positions of ring slots
+        j = jnp.arange(S)[None, :]
+        s = slot  # (B,1)
+        kv_pos = pos[:, None] - ((s - j) % S)
+    else:
+        j = jnp.arange(S)[None, :]
+        kv_pos = jnp.where(j <= pos[:, None], j, -1)
+    kv_pos = jnp.where(kv_pos >= 0, kv_pos, -1)
+
+    scale = cfg.head_dim ** -0.5
+    window = cfg.window if ring else None
+    o = attend_full(
+        q, ck, cv, positions, kv_pos, window=window, scale=scale,
+        softcap=cfg.attn_logit_softcap,
+    )
+    o = o.reshape(x.shape[0], 1, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("blhd,hde->ble", o, p["wo"].astype(x.dtype))
+    return out, new_cache
+
+
+# ================================================================ MLA fwd
+def _mla_qkv(p, x, cfg: ModelConfig, positions):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = _rms(x @ p["q_a"].astype(x.dtype), p["q_norm"])
+    q = jnp.einsum("blr,rhd->blhd", cq, p["q_b"].astype(x.dtype))
+    q = constrain(q, ("batch", "act_seq", "heads", "head_dim"))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = layers.apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_full = x @ p["kv_a"].astype(x.dtype)
+    c_kv = _rms(ckv_full[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = ckv_full[..., cfg.kv_lora_rank :][:, :, None, :]  # (B,L,1,dr)
+    k_rope = layers.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(p, c_kv, cfg: ModelConfig):
+    dn = cfg.qk_nope_head_dim
+    kv = jnp.einsum("bsr,rhd->bshd", c_kv, p["kv_b"].astype(c_kv.dtype))
+    kv = constrain(kv, ("batch", "act_seq", "heads", "head_dim"))
+    return kv[..., :dn], kv[..., dn:]  # k_nope (B,S,H,dn), v (B,S,H,dv)
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, q_pos, kv_pos, cfg, absorb):
+    """Shared MLA attention core; absorb=True uses the latent-space trick
+    (score/context computed against c_kv directly — decode optimization)."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    scale = (dn + dr) ** -0.5
+    if absorb:
+        kv_b_k = p["kv_b"][..., :dn]  # (r, H, dn)
+        kv_b_v = p["kv_b"][..., dn:]  # (r, H, dv)
+        q_eff = jnp.einsum(
+            "blhd,rhd->blhr", q_nope, kv_b_k.astype(q_nope.dtype)
+        )
+        s = jnp.einsum(
+            "blhr,bsr->bhls", q_eff, c_kv, preferred_element_type=jnp.float32
+        )
+        s = s + jnp.einsum(
+            "blhd,bsd->bhls", q_rope, k_rope, preferred_element_type=jnp.float32
+        )
+        s = s * scale
+        mask = _mask(q_pos, kv_pos, None)[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(c_kv.dtype)
+        ctx = jnp.einsum("bhls,bsr->blhr", w, c_kv)
+        o = jnp.einsum("blhr,rhd->blhd", ctx, kv_b_v.astype(ctx.dtype))
+    else:
+        k_nope, v = _mla_expand_kv(p, c_kv, cfg)
+        B, S = k_rope.shape[0], k_rope.shape[1]
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, :, None, :], (B, S, cfg.num_heads, dr)
+        )
+        k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # MLA has no KV grouping: Kv = H, G = 1
+        o = attend_full(
+            q[:, :, :, None, :], k, v, q_pos, kv_pos,
+            window=None, scale=scale,
+        )[:, :, :, 0, :]
+    return jnp.einsum("blhd,hde->ble", o, p["wo"].astype(o.dtype))
+
+
+def mla_forward(p, x, positions, cfg: ModelConfig, absorb: bool = False):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    return _mla_attend(
+        p, q_nope, q_rope, c_kv, k_rope, positions, positions, cfg, absorb
+    )
+
+
+def mla_prefill(p, x, positions, cfg: ModelConfig, cache_len: int,
+                absorb: bool = False):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    out = _mla_attend(
+        p, q_nope, q_rope, c_kv, k_rope, positions, positions, cfg, absorb
+    )
+    B = x.shape[0]
+    ckv_c = jnp.zeros((B, cache_len, cfg.kv_lora_rank), c_kv.dtype)
+    krope_c = jnp.zeros((B, cache_len, cfg.qk_rope_head_dim), k_rope.dtype)
+    ckv_c = jax.lax.dynamic_update_slice(ckv_c, c_kv, (0, 0, 0))
+    krope_c = jax.lax.dynamic_update_slice(krope_c, k_rope, (0, 0, 0))
+    return out, {"c_kv": ckv_c, "k_rope": krope_c}
+
+
+def mla_decode(p, x, pos, cache, cfg: ModelConfig, absorb: bool = True):
+    positions = pos[:, None]
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, x, cfg, positions)
+    bidx = jnp.arange(x.shape[0])[:, None]
+    c_kv = cache["c_kv"].at[bidx, pos[:, None]].set(c_kv_new)
+    k_rope = cache["k_rope"].at[bidx, pos[:, None]].set(k_rope_new)
+    S = c_kv.shape[1]
+    j = jnp.arange(S)[None, :]
+    kv_pos = jnp.where(j <= pos[:, None], j, -1)
+    out = _mla_attend(
+        p, q_nope, q_rope, c_kv, k_rope, positions, kv_pos, cfg, absorb
+    )
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

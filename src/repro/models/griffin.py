@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, De et al. 2024).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)                (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                (input gate)
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h given the gates, so prefill/training uses
+`jax.lax.associative_scan` (log-depth parallel scan over L — maps well to
+TPU, unlike a sequential scan); decode is the O(1) step.
+
+The full recurrent *block* (as in RecurrentGemma): two input branches
+(linear y-gate with GELU, linear x into conv1d(4) into RG-LRU),
+elementwise merge, linear out.  Like the LIF membrane, h never leaves
+fast memory during decode — see DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def rglru_block_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    E = cfg.d_model
+    R = cfg.lru_width or E
+    W = 4  # temporal conv width (recurrentgemma)
+    ks = jax.random.split(key, 7)
+    p, a = {}, {}
+    p["w_y"], a["w_y"] = layers.dense_init(ks[0], (E, R), ("embed", "lru"), dtype)
+    p["w_in"], a["w_in"] = layers.dense_init(ks[1], (E, R), ("embed", "lru"), dtype)
+    p["conv_w"] = jax.random.normal(ks[2], (W, R)).astype(dtype) * 0.1
+    a["conv_w"] = ("conv_w", "lru")
+    p["w_a"], a["w_a"] = layers.dense_init(ks[3], (R, R), ("lru", "lru_in"), dtype)
+    p["b_a"], a["b_a"] = jnp.zeros((R,), dtype), ("lru",)
+    p["w_gx"], a["w_gx"] = layers.dense_init(ks[4], (R, R), ("lru", "lru_in"), dtype)
+    p["b_gx"], a["b_gx"] = jnp.zeros((R,), dtype), ("lru",)
+    # Lambda init so that a^c in [0.9, 0.999] at r=1 (paper init)
+    u = jax.random.uniform(ks[5], (R,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / cfg.rglru_c))
+    p["lambda_raw"], a["lambda_raw"] = lam.astype(dtype), ("lru",)
+    p["w_out"], a["w_out"] = layers.dense_init(
+        ks[6], (R, E), ("lru", "embed"), dtype
+    )
+    return p, a
+
+
+def _rglru_gates(p, x: Array, cfg: ModelConfig):
+    """x: (..., R) conv output -> (log_a, beta_x) with
+    beta_x = sqrt(1 - a^2) * i_t * x."""
+    r = jax.nn.sigmoid(x @ p["w_a"].astype(x.dtype) + p["b_a"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ p["w_gx"].astype(x.dtype) + p["b_gx"].astype(x.dtype))
+    log_a = (
+        -cfg.rglru_c
+        * jax.nn.softplus(p["lambda_raw"].astype(jnp.float32))
+        * r.astype(jnp.float32)
+    )
+    a2 = jnp.exp(2.0 * log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a2, 1e-9, 1.0))
+    bx = beta * (i.astype(jnp.float32) * x.astype(jnp.float32))
+    return log_a, bx
+
+
+def rglru_scan(log_a: Array, bx: Array, h0: Array = None) -> Array:
+    """Associative scan of h_t = a_t h_{t-1} + bx_t over axis 1.
+
+    log_a, bx: (B, L, R) float32.  Returns h (B, L, R).
+    """
+    if h0 is not None:
+        # fold h0 into the first step: h_1 = a_1 h0 + bx_1
+        bx = bx.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, b1 * jnp.exp(la2) + b2
+
+    la, b = jax.lax.associative_scan(combine, (log_a, bx), axis=1)
+    return b
+
+
+def rglru_block_forward(
+    p, x: Array, cfg: ModelConfig, h0=None, conv0=None,
+    return_state: bool = False,
+):
+    """Full recurrent block.  x: (B, L, E) -> (B, L, E)."""
+    y = jax.nn.gelu(x @ p["w_y"].astype(x.dtype))
+    y = constrain(y, ("batch", "act_seq", "lru"))
+    u = x @ p["w_in"].astype(x.dtype)  # (B, L, R)
+    u = constrain(u, ("batch", "act_seq", "lru"))
+    W = p["conv_w"].shape[0]
+    if conv0 is None:
+        up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([conv0.astype(u.dtype), u], axis=1)
+    uc = sum(
+        up[:, i : i + u.shape[1], :] * p["conv_w"].astype(x.dtype)[i][None, None]
+        for i in range(W)
+    )
+    log_a, bx = _rglru_gates(p, uc, cfg)
+    h = rglru_scan(log_a, bx, h0)  # (B, L, R) float32
+    out = (h.astype(x.dtype) * y) @ p["w_out"].astype(x.dtype)
+    if return_state:
+        return out, {"h": h[:, -1], "conv": up[:, -(W - 1):, :]}
+    return out
+
+
+def rglru_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    R = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, 3, R), dtype),
+    }
+
+
+def rglru_block_decode(
+    p, x: Array, cache: Dict[str, Array], cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Array]]:
+    """One-token step.  x: (B, 1, E)."""
+    xt = x[:, 0]
+    y = jax.nn.gelu(xt @ p["w_y"].astype(x.dtype))
+    u = xt @ p["w_in"].astype(x.dtype)  # (B, R)
+    window = jnp.concatenate(
+        [cache["conv"].astype(u.dtype), u[:, None]], axis=1
+    )  # (B, W, R)
+    uc = jnp.einsum("bwr,wr->br", window, p["conv_w"].astype(x.dtype))
+    log_a, bx = _rglru_gates(p, uc, cfg)
+    h = jnp.exp(log_a) * cache["h"] + bx
+    out = ((h.astype(x.dtype) * y) @ p["w_out"].astype(x.dtype))[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}

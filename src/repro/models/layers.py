@@ -1,0 +1,140 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings.
+
+Every init function returns (params, logical_axes): params is a dict of
+arrays, logical_axes a matching dict of tuples naming each dim (used by
+distributed/partitioning.py to derive PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------- helpers
+def _uniform(key, shape, scale, dtype):
+    return jax.random.uniform(
+        key, shape, minval=-scale, maxval=scale, dtype=jnp.float32
+    ).astype(dtype)
+
+
+def dense_init(key, shape, axes, dtype=jnp.float32, fan_in_dims=1):
+    """fan-in-scaled init; axes = logical names, one per dim."""
+    fan_in = math.prod(shape[:fan_in_dims])
+    scale = 1.0 / math.sqrt(fan_in)
+    return _uniform(key, shape, scale, dtype), tuple(axes)
+
+
+# ---------------------------------------------------------------- norms
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    a = {"scale": ("embed",)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+        a["bias"] = ("embed",)
+    return p, a
+
+
+def apply_norm(p, x: Array, kind: str, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float, rope_pct: float = 1.0):
+    rot_dim = int(head_dim * rope_pct) // 2 * 2
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    )
+    return inv, rot_dim
+
+
+def apply_rope(
+    x: Array,  # (..., L, H, D)
+    positions: Array,  # (..., L) int32
+    theta: float,
+    rope_pct: float = 1.0,
+) -> Array:
+    D = x.shape[-1]
+    inv, rot_dim = rope_freqs(D, theta, rope_pct)
+    if rot_dim == 0:
+        return x
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., L, rot/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., L, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = xr[..., : rot_dim // 2], xr[..., rot_dim // 2 :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate(
+        [y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1
+    )
+
+
+# ---------------------------------------------------------------- mlp
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, a = {}, {}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"], a["w_gate"] = dense_init(
+            k1, (d_model, d_ff), ("embed", "mlp"), dtype
+        )
+    p["w_up"], a["w_up"] = dense_init(
+        k2, (d_model, d_ff), ("embed", "mlp"), dtype
+    )
+    p["w_down"], a["w_down"] = dense_init(
+        k3, (d_ff, d_model), ("mlp", "embed"), dtype
+    )
+    return p, a
+
+
+def apply_mlp(p, x: Array, kind: str) -> Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype)) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(kind)
+    h = constrain(h, ("batch", "act_seq", "mlp"))
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embed
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    p = {"table": jax.random.normal(key, (vocab, d_model)).astype(dtype) * 0.02}
+    a = {"table": ("vocab", "embed")}
+    return p, a
+
+
+def embed(p, tokens: Array, scale: Optional[float]) -> Array:
+    x = p["table"][tokens]
+    if scale is not None:
+        x = x * scale
+    return x
+
+
+def unembed(p_head: Array, x: Array, softcap: Optional[float]) -> Array:
+    logits = x @ p_head.astype(x.dtype)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits.astype(jnp.float32) / softcap)
+    return logits

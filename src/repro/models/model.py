@@ -1,0 +1,321 @@
+"""Unified Model API: init / loss / prefill / decode for every arch.
+
+Handles the modality frontends (stubs per assignment):
+  - vlm   : precomputed CLIP patch embeddings (B, n_img, 1024) are projected
+            by a trainable linear into d_model and prepended to the token
+            embeddings; labels cover only the text positions.
+  - audio : EnCodec token streams (B, L, K codebooks); embeddings are the
+            sum over K codebook tables (MusicGen), logits are per-codebook.
+
+`Model.abstract()` returns (param ShapeDtypeStructs, logical axes) without
+allocating — the dry-run path for 34B-param configs on a CPU host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.distributed.partitioning import constrain
+from repro.models import layers, transformer
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+PyTree = Any
+
+CLIP_EMBED_DIM = 1024  # frozen CLIP-L/14 output width (stub frontend)
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def _sinusoidal_pe(positions: Array, d_model: int) -> Array:
+    """(B, L) -> (B, L, d_model) classic transformer PE (musicgen)."""
+    half = d_model // 2
+    freq = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------ init
+    def init(self, key) -> Tuple[PyTree, PyTree]:
+        cfg = self.cfg
+        pdt = _dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 8)
+        p, a = {}, {}
+        Vp = cfg.padded_vocab
+        if cfg.num_codebooks:
+            p["embed"] = {
+                "table": jax.random.normal(
+                    keys[0], (cfg.num_codebooks, Vp, cfg.d_model)
+                ).astype(pdt) * 0.02
+            }
+            a["embed"] = {"table": ("codebook", "vocab", "embed")}
+        else:
+            p["embed"], a["embed"] = layers.embedding_init(
+                keys[0], Vp, cfg.d_model, pdt
+            )
+        if cfg.num_image_tokens:
+            p["img_proj"], a["img_proj"] = layers.dense_init(
+                keys[1], (CLIP_EMBED_DIM, cfg.d_model), ("clip", "embed"), pdt
+            )
+        for gi, (gname, pattern, repeats) in enumerate(transformer.layer_plan(cfg)):
+            p[gname], a[gname] = transformer.group_init(
+                jax.random.fold_in(keys[2], gi), cfg, pattern, repeats, pdt
+            )
+        p["final_norm"], a["final_norm"] = layers.norm_init(
+            cfg.d_model, cfg.norm_kind, pdt
+        )
+        if not cfg.tie_embeddings:
+            if cfg.num_codebooks:
+                p["lm_head"], a["lm_head"] = layers.dense_init(
+                    keys[3], (cfg.d_model, cfg.num_codebooks, Vp),
+                    ("embed", "codebook", "vocab"), pdt,
+                )
+            else:
+                p["lm_head"], a["lm_head"] = layers.dense_init(
+                    keys[3], (cfg.d_model, Vp), ("embed", "vocab"), pdt
+                )
+        if cfg.quant in ("q115_int", "q1_7_int"):
+            p = self._quantize_storage(p)
+        return p, a
+
+    def abstract(self) -> Tuple[PyTree, PyTree]:
+        """(param shapes, logical axes) without allocation."""
+        box = {}
+
+        def f(key):
+            params, axes = self.init(key)
+            box["axes"] = axes
+            return params
+
+        shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+        return shapes, box["axes"]
+
+    # ------------------------------------------------------------ embed
+    def _embed_tokens(self, p, tokens: Array) -> Array:
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        if cfg.num_codebooks:
+            # tokens (B, L, K) -> sum of per-codebook embeddings
+            x = jnp.zeros((*tokens.shape[:2], cfg.d_model), cdt)
+            for k in range(cfg.num_codebooks):
+                x = x + p["embed"]["table"][k][tokens[..., k]].astype(cdt)
+        else:
+            x = p["embed"]["table"][tokens].astype(cdt)
+        if cfg.emb_scale is not None:
+            x = x * jnp.asarray(cfg.emb_scale, cdt)
+        return x
+
+    def _inputs(self, p, batch: Dict[str, Array]) -> Array:
+        """Token (+ frontend) embeddings -> (B, L_total, E)."""
+        x = self._embed_tokens(p, batch["tokens"])
+        if self.cfg.num_image_tokens:
+            img = batch["img_embeds"].astype(x.dtype) @ p["img_proj"].astype(
+                x.dtype
+            )
+            x = jnp.concatenate([img, x], axis=1)
+        return x
+
+    # ------------------------------------------------------------ body
+    def _quantize_storage(self, p):
+        """True-int storage (serving mode): matmul weights (ndim>=2) are
+        kept as Q-format integer codes; norms/biases stay float."""
+        fmt = quant.Q1_15 if self.cfg.quant == "q115_int" else quant.Q1_7
+
+        def leaf(x):
+            if (
+                hasattr(x, "ndim") and x.ndim >= 2
+                and jnp.issubdtype(x.dtype, jnp.floating)
+            ):
+                return quant.quantize(x, fmt)
+            return x
+
+        return jax.tree_util.tree_map(leaf, p)
+
+    def _maybe_quant(self, p):
+        cfg = self.cfg
+        if cfg.quant == "q115":
+            return quant.quant_params(p, quant.Q1_15)
+        if cfg.quant == "q1_7":
+            return quant.quant_params(p, quant.Q1_7)
+        if cfg.quant in ("q115_int", "q1_7_int"):
+            # dequantize ONLY the top-level (non-group) params here; the
+            # layer-stacked groups are dequantized per layer inside the
+            # scan body (transformer.dequant_block_params) so one layer's
+            # float weights are live at a time.
+            group_names = {g for g, _, _ in transformer.layer_plan(cfg)}
+            return {
+                k: (v if k in group_names
+                    else transformer.dequant_block_params(v))
+                for k, v in p.items()
+            }
+        return p
+
+    def _add_pe(self, x: Array, positions: Array) -> Array:
+        if self.cfg.pos_kind == "sinusoidal":
+            x = x + _sinusoidal_pe(positions, self.cfg.d_model).astype(x.dtype)
+        return x
+
+    def backbone(self, p, x: Array, positions: Array) -> Tuple[Array, Array]:
+        cfg = self.cfg
+        x = self._add_pe(x, positions)
+        aux_total = jnp.zeros((), jnp.float32)
+        for gname, pattern, _ in transformer.layer_plan(cfg):
+            x, aux = transformer.group_forward(
+                p[gname], x, positions, cfg, pattern
+            )
+            aux_total = aux_total + aux
+        x = layers.apply_norm(
+            p["final_norm"], x, cfg.norm_kind, cfg.norm_eps
+        )
+        return x, aux_total
+
+    def _head(self, p, h: Array) -> Array:
+        """Logits over the padded vocab; padded entries masked to -inf."""
+        cfg = self.cfg
+        if cfg.num_codebooks:
+            w = (
+                p["embed"]["table"].transpose(2, 0, 1)
+                if cfg.tie_embeddings
+                else p["lm_head"]
+            )  # (E, K, Vp)
+            logits = jnp.einsum("...e,ekv->...kv", h, w.astype(h.dtype))
+            if cfg.logit_softcap is not None:
+                logits = cfg.logit_softcap * jnp.tanh(
+                    logits.astype(jnp.float32) / cfg.logit_softcap
+                )
+        else:
+            w = p["embed"]["table"].T if cfg.tie_embeddings else p["lm_head"]
+            logits = layers.unembed(w, h, cfg.logit_softcap)
+        if cfg.padded_vocab != cfg.vocab_size:
+            valid = (
+                jax.lax.iota(jnp.int32, cfg.padded_vocab) < cfg.vocab_size
+            )
+            logits = jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+        return logits
+
+    # ------------------------------------------------------------ train
+    def loss(self, p, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        """batch: tokens (B,L[,K]) int32, targets same shape (-1 = masked),
+        optional img_embeds."""
+        cfg = self.cfg
+        p = self._maybe_quant(p)
+        x = self._inputs(p, batch)
+        B, L = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+        h, aux = self.backbone(p, x, positions)
+        if cfg.num_image_tokens:  # only text positions produce logits
+            h = h[:, cfg.num_image_tokens :]
+        logits = self._head(p, h).astype(jnp.float32)
+        cb = ("codebook",) if cfg.num_codebooks else ()
+        logits = constrain(logits, ("batch", "act_seq") + cb + ("vocab",))
+        targets = batch["targets"]
+        mask = (targets >= 0).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = jnp.maximum(targets, 0)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        ce = jnp.sum(nll * mask) / denom
+        loss = ce + 0.01 * aux / max(cfg.num_layers, 1)
+        metrics = {
+            "loss": loss, "ce": ce,
+            "moe_aux": aux,
+            "tokens": jnp.sum(mask),
+        }
+        return loss, metrics
+
+    # ---------------------------------------------------------- serving
+    def prefill(
+        self, p, batch: Dict[str, Array], cache_len: int
+    ) -> Tuple[Array, PyTree]:
+        """Run the prompt; returns (last-position logits (B, ...), cache)."""
+        cfg = self.cfg
+        p = self._maybe_quant(p)
+        x = self._inputs(p, batch)
+        B, L = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32), (B, L))
+        x = self._add_pe(x, positions)
+        cache = {}
+        for gname, pattern, _ in transformer.layer_plan(cfg):
+            x, c = transformer.group_prefill(
+                p[gname], x, positions, cfg, pattern, cache_len
+            )
+            cache[gname] = c
+        x = layers.apply_norm(p["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = self._head(p, x[:, -1:])[:, 0]
+        return logits.astype(jnp.float32), cache
+
+    def decode_step(
+        self, p, token: Array, pos: Array, cache: PyTree
+    ) -> Tuple[Array, PyTree]:
+        """token: (B, 1[,K]) int32; pos: (B,) absolute position of token."""
+        cfg = self.cfg
+        p = self._maybe_quant(p)
+        x = self._embed_tokens(p, token)
+        x = self._add_pe(x, pos[:, None])
+        new_cache = {}
+        for gname, pattern, _ in transformer.layer_plan(cfg):
+            x, c = transformer.group_decode(
+                p[gname], x, pos, cache[gname], cfg, pattern
+            )
+            new_cache[gname] = c
+        x = layers.apply_norm(p["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        logits = self._head(p, x)[:, 0]
+        return logits.astype(jnp.float32), new_cache
+
+    def init_cache(self, batch: int, cache_len: int) -> PyTree:
+        cfg = self.cfg
+        cdt = _dtype(cfg.dtype)
+        cache = {}
+        for gname, pattern, repeats in transformer.layer_plan(cfg):
+            cache[gname] = transformer.group_cache_init(
+                cfg, pattern, repeats, batch, cache_len, cdt
+            )
+        return cache
+
+    def abstract_cache(self, batch: int, cache_len: int) -> PyTree:
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, cache_len)
+        )
+
+    def param_count(self) -> int:
+        shapes, _ = self.abstract()
+        import math
+        return sum(
+            math.prod(s.shape)
+            for s in jax.tree_util.tree_leaves(shapes)
+        )
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.num_experts:
+            return total
+        shapes, _ = self.abstract()
+        expert_leaves = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = [getattr(k, 'key', None) for k in path]
+            if "ffn" in keys and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys
+            ):
+                import math
+                expert_leaves += math.prod(leaf.shape)
+        inactive = expert_leaves * (
+            1 - cfg.num_experts_per_tok / cfg.num_experts
+        )
+        return int(total - inactive)

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts: top-k router + grouped-capacity einsum dispatch.
+
+Gshard-style dispatch/combine einsums over *token groups*: tokens are
+flattened (batch-major, so batch sharding propagates through the reshape)
+into groups of `moe_group_size`; capacity is per group,
+C = ceil(Gs * k / E * cf).  The dispatch einsum costs E*C*d FLOPs per
+token — with Gs=512 that is ~0.7% (mixtral) to ~20% (granite's tiny
+experts) of the expert MLP FLOPs, while everything stays a dense einsum
+that shards cleanly under SPMD (expert dim -> `model` mesh axis = expert
+parallelism; group dim -> (`pod`,`data`) = data parallelism).
+
+Two rejected alternatives, measured in the dry-run (EXPERIMENTS.md §Perf
+notes): whole-row capacity einsum dispatch (C grows with S -> dispatch
+FLOPs rival expert FLOPs) and scatter-add dispatch (data-dependent
+scatter into the expert dim defeats SPMD -> XLA replicates the buffers
+and emits ~390 GB/layer of all-reduce).
+
+Overflow tokens are dropped (zero combine weight; the residual passes
+them through) — standard fixed-shape TPU MoE.  Conceptually this is the
+paper's event-driven insight at the token level: routing is a spike —
+only selected experts integrate a token (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    E, F, N = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["router"], a["router"] = layers.dense_init(
+        ks[0], (E, N), ("embed", "expert"), dtype
+    )
+    scale = 1.0 / math.sqrt(E)
+    fscale = 1.0 / math.sqrt(F)
+    p["w_gate"] = jax.random.uniform(
+        ks[1], (N, E, F), minval=-scale, maxval=scale
+    ).astype(dtype)
+    a["w_gate"] = ("expert", "embed", "mlp")
+    p["w_up"] = jax.random.uniform(
+        ks[2], (N, E, F), minval=-scale, maxval=scale
+    ).astype(dtype)
+    a["w_up"] = ("expert", "embed", "mlp")
+    p["w_down"] = jax.random.uniform(
+        ks[3], (N, F, E), minval=-fscale, maxval=fscale
+    ).astype(dtype)
+    a["w_down"] = ("expert", "mlp", "embed")
+    return p, a
+
+
+def group_size(cfg: ModelConfig, tokens: int) -> int:
+    gs = min(cfg.moe_group_size, tokens)
+    while tokens % gs:
+        gs -= 1
+    return gs
+
+
+def capacity(gs: int, cfg: ModelConfig) -> int:
+    c = math.ceil(
+        gs * cfg.num_experts_per_tok / cfg.num_experts * cfg.capacity_factor
+    )
+    return max(int(c), 1)
+
+
+def router_weights(logits: Array, cfg: ModelConfig) -> Tuple[Array, Array]:
+    """Top-k routing -> (weights (..., k), indices (..., k))."""
+    k = cfg.num_experts_per_tok
+    if cfg.router_softmax_order == "topk_then_softmax":
+        vals, idx = jax.lax.top_k(logits, k)
+        w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    else:  # softmax_then_topk (granite)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return w, idx
+
+
+def moe_forward(p, x: Array, cfg: ModelConfig) -> Tuple[Array, Dict]:
+    """x: (B, S, E) -> (out (B, S, E), aux metrics)."""
+    B, S, D = x.shape
+    N, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    Gs = group_size(cfg, T)
+    G = T // Gs
+    C = capacity(Gs, cfg)
+    xg = x.reshape(G, Gs, D)  # batch-major flatten: sharding propagates
+    xg = constrain(xg, ("batch", "act_seq", "embed_act"))
+
+    logits = xg @ p["router"].astype(x.dtype)  # (G, Gs, N)
+    w, idx = router_weights(logits, cfg)  # (G, Gs, K) f32 / i32
+
+    # queue position of each (token, slot) within its expert, per group
+    onehot = jax.nn.one_hot(idx, N, dtype=jnp.int32)  # (G, Gs, K, N)
+    flat = onehot.reshape(G, Gs * K, N)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos_flat.reshape(G, Gs, K, N) * onehot, axis=-1)
+    keep = pos < C  # (G, Gs, K)
+    slot_oh = jax.nn.one_hot(jnp.minimum(pos, C - 1), C, dtype=x.dtype)
+    slot_oh = slot_oh * keep[..., None].astype(x.dtype)  # (G, Gs, K, C)
+
+    dispatch = jnp.einsum(
+        "gske,gskc->gsec", onehot.astype(x.dtype), slot_oh
+    )  # (G, Gs, E, C)
+    combine = jnp.einsum(
+        "gske,gskc,gsk->gsec",
+        onehot.astype(jnp.float32),
+        slot_oh.astype(jnp.float32),
+        w,
+    ).astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (G, E, C, D)
+    xe = constrain(xe, ("batch", "expert", "cap", "embed_act"))
+
+    h_up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        h_gate = jnp.einsum(
+            "gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype)
+        )
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        h = act(h_gate) * h_up
+    else:
+        h = jax.nn.gelu(h_up)
+    h = constrain(h, ("batch", "expert", "cap", "mlp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = constrain(ye, ("batch", "expert", "cap", "embed_act"))
+
+    out = jnp.einsum("gecd,gsec->gsd", ye, combine)  # (G, Gs, D)
+    out = out.reshape(B, S, D)
+
+    # load-balancing auxiliaries (Switch aux loss)
+    me = jnp.mean(
+        onehot.astype(jnp.float32).sum(2).reshape(T, N), axis=0
+    )
+    pe = jnp.mean(
+        jax.nn.softmax(logits.astype(jnp.float32), -1).reshape(T, N), axis=0
+    )
+    aux = {
+        "moe_aux_loss": N * jnp.sum(me * pe),
+        "moe_dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out, aux

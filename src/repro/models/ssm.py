@@ -1,0 +1,305 @@
+"""Mamba2 — SSD (state-space duality) layer, chunked matmul formulation.
+
+Training/prefill uses the chunked SSD algorithm (Dao & Gu 2024): the
+sequence is split into chunks of Q tokens; intra-chunk work is a masked
+quadratic matmul (MXU-friendly), inter-chunk work is a length-L/Q linear
+recurrence over per-chunk states (lax.scan).  Decode uses the O(1)
+recurrent form with (conv_state, ssm_state) carried in the cache — the
+same "state never leaves fast memory" pattern as the paper's LIF membrane
+register (DESIGN.md §Arch-applicability).
+
+Projections are kept as separate params (w_z/w_x/w_B/w_C/w_dt and per-part
+convs) instead of one fused in_proj so each can carry its own logical
+sharding axes (the fused layout has a mixed output dim that defeats clean
+TP; see partitioning rules).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.partitioning import constrain
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+
+
+def ssm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    E = cfg.d_model
+    DI = cfg.d_inner
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 11)
+    p, a = {}, {}
+    p["w_z"], a["w_z"] = layers.dense_init(ks[10], (E, DI), ("embed", "inner"), dtype)
+    p["w_x"], a["w_x"] = layers.dense_init(ks[1], (E, DI), ("embed", "inner"), dtype)
+    p["w_B"], a["w_B"] = layers.dense_init(
+        ks[2], (E, G, N), ("embed", "groups", "state"), dtype
+    )
+    p["w_C"], a["w_C"] = layers.dense_init(
+        ks[3], (E, G, N), ("embed", "groups", "state"), dtype
+    )
+    p["w_dt"], a["w_dt"] = layers.dense_init(
+        ks[4], (E, H), ("embed", "heads"), dtype
+    )
+    # depthwise causal convs (width W) on x, B, C streams
+    p["conv_x"] = jax.random.normal(ks[5], (W, DI)).astype(dtype) * 0.1
+    a["conv_x"] = ("conv_w", "inner")
+    p["conv_B"] = jax.random.normal(ks[6], (W, G * N)).astype(dtype) * 0.1
+    a["conv_B"] = ("conv_w", "state")
+    p["conv_C"] = jax.random.normal(ks[7], (W, G * N)).astype(dtype) * 0.1
+    a["conv_C"] = ("conv_w", "state")
+    # per-head decay / skip / dt bias
+    p["A_log"] = jnp.log(
+        jax.random.uniform(ks[8], (H,), minval=1.0, maxval=16.0)
+    ).astype(dtype)
+    a["A_log"] = ("heads",)
+    p["D"] = jnp.ones((H,), dtype)
+    a["D"] = ("heads",)
+    p["dt_bias"] = jnp.log(
+        jnp.expm1(
+            jax.random.uniform(ks[9], (H,), minval=1e-3, maxval=1e-1)
+        )
+    ).astype(dtype)
+    a["dt_bias"] = ("heads",)
+    p["norm_scale"] = jnp.ones((DI,), dtype)
+    a["norm_scale"] = ("inner",)
+    p["out_proj"], a["out_proj"] = layers.dense_init(
+        ks[0], (DI, E), ("inner", "embed"), dtype
+    )
+    return p, a
+
+
+def _causal_conv(x: Array, w: Array) -> Array:
+    """Depthwise causal conv along axis 1.  x: (B, L, D), w: (W, D)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out
+
+
+def _segsum(dA: Array) -> Array:
+    """(..., Q) -> (..., Q, Q) lower-triangular segment sums."""
+    c = jnp.cumsum(dA, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    Q = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    xdt: Array,  # (B, L, H, P) inputs pre-multiplied by dt
+    dA: Array,  # (B, L, H) = dt * A (negative)
+    Bm: Array,  # (B, L, G, N)
+    Cm: Array,  # (B, L, G, N)
+    chunk: int,
+    h0: Array = None,  # optional initial state (B, H, P, N)
+) -> Tuple[Array, Array]:
+    """Chunked SSD scan.  Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    B, L, H, P = xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // Q
+    # reshape to chunks
+    xc = xdt.reshape(B, nc, Q, H, P)
+    dAc = dA.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)  # (B, H, nc, Q)
+    Bc = Bm.reshape(B, nc, Q, G, N)
+    Cc = Cm.reshape(B, nc, Q, G, N)
+    rep = H // G  # heads per group
+
+    # head -> group map for einsums: expand B/C to heads lazily via take
+    def hgrp(t):  # (B, nc, Q, G, N) -> (B, nc, Q, H, N)
+        return jnp.repeat(t, rep, axis=3)
+
+    Bh, Ch = hgrp(Bc), hgrp(Cc)
+
+    # --- intra-chunk (diag) ---
+    Lmat = jnp.exp(_segsum(dAc))  # (B, H, nc, Q, Q)
+    scores = jnp.einsum(
+        "bclhn,bcshn->bhcls", Ch, Bh, preferred_element_type=jnp.float32
+    )
+    y_diag = jnp.einsum(
+        "bhcls,bhcls,bcshp->bclhp",
+        scores,
+        Lmat,
+        xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- chunk states ---
+    csum = jnp.cumsum(dAc, axis=-1)  # (B, H, nc, Q)
+    decay_states = jnp.exp(csum[..., -1:] - csum)  # (B, H, nc, Q)
+    states = jnp.einsum(
+        "bcshn,bhcs,bcshp->bchpn",
+        Bh,
+        decay_states,
+        xc,
+        preferred_element_type=jnp.float32,
+    )  # (B, nc, H, P, N)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(csum[..., -1])  # (B, H, nc)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+
+    def body(carry, xs):
+        s_c, d_c = xs  # (B, H, P, N), (B, H)
+        prev = carry
+        new = prev * d_c[..., None, None] + s_c
+        return new, prev
+
+    s_seq = states.transpose(1, 0, 2, 3, 4)  # (nc, B, H, P, N)
+    d_seq = chunk_decay.transpose(2, 0, 1)  # (nc, B, H)
+    final, prevs = jax.lax.scan(body, h0.astype(jnp.float32), (s_seq, d_seq))
+    prev_states = prevs.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # --- inter-chunk (off-diag) outputs ---
+    state_decay = jnp.exp(csum)  # (B, H, nc, Q) decay from chunk start incl l
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp",
+        Ch,
+        prev_states,
+        state_decay,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(B, Lp, H, P)[:, :L]
+    return y, final
+
+
+def _split_heads(t: Array, H: int, P: int) -> Array:
+    return t.reshape(*t.shape[:-1], H, P)
+
+
+def ssm_forward(
+    p, x: Array, cfg: ModelConfig, h0=None, return_state: bool = False
+):
+    """x: (B, L, E) -> (B, L, E).  Training / prefill path."""
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    B, L, E = x.shape
+    z = x @ p["w_z"].astype(x.dtype)  # (B, L, DI)
+    xs = x @ p["w_x"].astype(x.dtype)
+    Bs = jnp.einsum("ble,egn->blgn", x, p["w_B"].astype(x.dtype)).reshape(
+        B, L, G * N
+    )
+    Cs = jnp.einsum("ble,egn->blgn", x, p["w_C"].astype(x.dtype)).reshape(
+        B, L, G * N
+    )
+    dt_raw = x @ p["w_dt"].astype(x.dtype)  # (B, L, H)
+
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"].astype(x.dtype)))
+    xs = constrain(xs, ("batch", "act_seq", "inner"))
+    Bs = jax.nn.silu(_causal_conv(Bs, p["conv_B"].astype(x.dtype))).reshape(
+        B, L, G, N
+    )
+    Cs = jax.nn.silu(_causal_conv(Cs, p["conv_C"].astype(x.dtype))).reshape(
+        B, L, G, N
+    )
+    Bs = constrain(Bs, ("batch", "act_seq", "groups", "state"))
+    Cs = constrain(Cs, ("batch", "act_seq", "groups", "state"))
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, L, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    dA = dt * A  # (B, L, H)
+
+    xh = _split_heads(xs, H, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, state = ssd_chunked(xdt, dA, Bs, Cs, cfg.ssm_chunk, h0)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, L, H * P).astype(x.dtype)
+
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf
+        * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + 1e-6)
+        * p["norm_scale"].astype(jnp.float32)
+    ).astype(x.dtype)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, state
+    return out
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    W = cfg.ssm_conv_width
+    return {
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+        "conv_B": jnp.zeros((batch, W - 1, G * N), dtype),
+        "conv_C": jnp.zeros((batch, W - 1, G * N), dtype),
+        "state": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def _conv_step(cache_part: Array, new: Array, w: Array):
+    """One causal-conv step.  cache: (B, W-1, D) previous inputs."""
+    window = jnp.concatenate([cache_part, new[:, None, :]], axis=1)  # (B,W,D)
+    out = jnp.einsum("bwd,wd->bd", window, w)
+    return out, window[:, 1:, :]
+
+
+def ssm_decode(
+    p, x: Array, cache: Dict[str, Array], cfg: ModelConfig
+) -> Tuple[Array, Dict[str, Array]]:
+    """One-token decode.  x: (B, 1, E)."""
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_ngroups
+    B = x.shape[0]
+    xt = x[:, 0]
+    z = xt @ p["w_z"].astype(x.dtype)
+    xs = xt @ p["w_x"].astype(x.dtype)
+    Bs = jnp.einsum("be,egn->bgn", xt, p["w_B"].astype(x.dtype)).reshape(B, G * N)
+    Cs = jnp.einsum("be,egn->bgn", xt, p["w_C"].astype(x.dtype)).reshape(B, G * N)
+    dt_raw = xt @ p["w_dt"].astype(x.dtype)
+
+    xs, conv_x = _conv_step(cache["conv_x"], xs, p["conv_x"].astype(x.dtype))
+    Bs, conv_B = _conv_step(cache["conv_B"], Bs, p["conv_B"].astype(x.dtype))
+    Cs, conv_C = _conv_step(cache["conv_C"], Cs, p["conv_C"].astype(x.dtype))
+    xs, Bs, Cs = jax.nn.silu(xs), jax.nn.silu(Bs), jax.nn.silu(Cs)
+    Bs = Bs.reshape(B, G, N)
+    Cs = Cs.reshape(B, G, N)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)  # (B, H)
+
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bs, rep, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(Cs, rep, axis=1).astype(jnp.float32)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn,bh->bhpn", xh, Bh, dt
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, H * P).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (
+        yf
+        * jax.lax.rsqrt(jnp.mean(yf**2, -1, keepdims=True) + 1e-6)
+        * p["norm_scale"].astype(jnp.float32)
+    ).astype(x.dtype)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None, :]
+    new_cache = {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "state": state,
+    }
+    return out, new_cache

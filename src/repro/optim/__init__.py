@@ -1,0 +1,21 @@
+from repro.optim.adam import (
+    Optimizer,
+    adam,
+    adamw,
+    chain_clip,
+    global_norm,
+    sgd,
+)
+from repro.optim.schedule import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "adamw",
+    "sgd",
+    "chain_clip",
+    "global_norm",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+]

@@ -1,0 +1,149 @@
+"""Optimizers built from scratch (no optax dependency).
+
+The paper trains with Adam (lr 5e-4) — implemented here exactly
+(Kingma & Ba, bias-corrected), plus AdamW and SGD-momentum for the
+substrate.  All optimizers share a functional `Optimizer` interface:
+
+    opt = adam(5e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+States are plain pytrees (shardable under pjit with the same partitioning
+rules as params, see distributed/partitioning.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]
+
+
+class AdamState(NamedTuple):
+    count: Array
+    mu: PyTree
+    nu: PyTree
+
+
+def _zeros_like_tree(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params
+    )
+
+
+def adam(
+    lr: float | Callable[[Array], Array] = 5e-4,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Optimizer:
+    """Adam (paper §4.2.1: 'trained using the Adam optimizer, lr 5e-4')."""
+
+    def init(params):
+        return AdamState(
+            count=jnp.zeros([], jnp.int32),
+            mu=_zeros_like_tree(params, jnp.float32),
+            nu=_zeros_like_tree(params, jnp.float32),
+        )
+
+    def update(grads, state: AdamState, params=None):
+        count = state.count + 1
+        lr_t = lr(count) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads,
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads,
+        )
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree_util.tree_map(
+            lambda m, v: (-lr_t * (m / c1) / (jnp.sqrt(v / c2) + eps)),
+            mu, nu,
+        )
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adamw(
+    lr: float | Callable[[Array], Array] = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Optimizer:
+    base = adam(lr, b1, b2, eps)
+
+    def update(grads, state: AdamState, params=None):
+        updates, state = base.update(grads, state, params)
+        count = state.count
+        lr_t = lr(count) if callable(lr) else lr
+        if params is not None and weight_decay:
+            updates = jax.tree_util.tree_map(
+                lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+                updates, params,
+            )
+        return updates, state
+
+    return Optimizer(init=base.init, update=update)
+
+
+class SGDState(NamedTuple):
+    momentum: PyTree
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return SGDState(momentum=_zeros_like_tree(params, jnp.float32))
+
+    def update(grads, state: SGDState, params=None):
+        mom = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state.momentum, grads,
+        )
+        updates = jax.tree_util.tree_map(lambda m: -lr * m, mom)
+        return updates, SGDState(momentum=mom)
+
+    return Optimizer(init=init, update=update)
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def chain_clip(opt: Optimizer, max_norm: Optional[float] = 1.0) -> Optimizer:
+    """Global-norm gradient clipping wrapper."""
+    if max_norm is None:
+        return opt
+
+    def update(grads, state, params=None):
+        norm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(init=opt.init, update=update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates
+    )

@@ -1,0 +1,201 @@
+"""Training loop substrate: step builder, grad accumulation, metrics,
+checkpoint/restart, straggler watchdog.
+
+`make_train_step` builds the pure step function used by both the real
+trainer and the multi-pod dry-run (launch/dryrun.py lowers exactly this
+function for every arch x shape) — one source of truth for the compiled
+graph.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.models.model import Model
+from repro.optim.adam import Optimizer, apply_updates
+
+PyTree = Any
+
+
+class TrainState:  # simple pytree container
+    def __init__(self, params, opt_state, step):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    accum_steps: int = 1,
+) -> Callable:
+    """(state, batch) -> (state, metrics).  With accum_steps > 1 the batch
+    leading dim must be (accum_steps * microbatch) and gradients are
+    accumulated over a lax.scan of microbatches (memory/footprint knob)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params, opt_state = state.params, state.opt_state
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+        else:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + l), ()
+
+            mbs = jax.tree_util.tree_map(
+                lambda t: t.reshape(accum_steps, -1, *t.shape[1:]), batch
+            )
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / accum_steps, gsum
+            )
+            loss = lsum / accum_steps
+            metrics = {"loss": loss}
+
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Per-step wall-time monitor.  On a real pod, a step exceeding
+    `factor` x the running median marks this host a straggler candidate:
+    we log it and (configurably) trigger a checkpoint so the controller
+    can evict/replace the slow node.  Logic is host-side and runs as-is
+    in this container."""
+
+    factor: float = 3.0
+    warmup: int = 5
+    _times: list = dataclasses.field(default_factory=list)
+
+    def observe(self, dt: float) -> Optional[str]:
+        self._times.append(dt)
+        if len(self._times) <= self.warmup:
+            return None
+        hist = sorted(self._times[:-1])
+        median = hist[len(hist) // 2]
+        if dt > self.factor * median:
+            return (
+                f"straggler: step took {dt:.3f}s vs median {median:.3f}s "
+                f"(x{dt / median:.1f})"
+            )
+        return None
+
+
+class Trainer:
+    """Checkpoint/restart-capable loop driving the pure step function."""
+
+    def __init__(
+        self,
+        model: Model,
+        optimizer: Optimizer,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 100,
+        keep_n: int = 3,
+        accum_steps: int = 1,
+        jit: bool = True,
+        donate: bool = True,
+    ):
+        self.model = model
+        self.optimizer = optimizer
+        self.step_fn = make_train_step(model, optimizer, accum_steps)
+        if jit:
+            self.step_fn = jax.jit(
+                self.step_fn, donate_argnums=(0,) if donate else ()
+            )
+        self.ckpt = (
+            CheckpointManager(ckpt_dir, keep_n=keep_n, async_save=True)
+            if ckpt_dir
+            else None
+        )
+        self.ckpt_every = ckpt_every
+        self.watchdog = StragglerWatchdog()
+
+    def init_state(self, key) -> TrainState:
+        params, _ = self.model.init(key)
+        return TrainState(
+            params, self.optimizer.init(params), jnp.zeros((), jnp.int32)
+        )
+
+    def restore_or_init(self, key) -> TrainState:
+        state = self.init_state(key)
+        if self.ckpt is not None:
+            step, restored = self.ckpt.restore_latest(state)
+            if restored is not None:
+                return restored
+        return state
+
+    def run(
+        self,
+        state: TrainState,
+        batches: Iterator[Dict[str, jax.Array]],
+        num_steps: int,
+        log_every: int = 10,
+        log_fn=print,
+    ) -> Tuple[TrainState, Dict[str, float]]:
+        last_metrics: Dict[str, float] = {}
+        for i in range(num_steps):
+            batch = next(batches)
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            warn = self.watchdog.observe(dt)
+            if warn:
+                log_fn(f"[watchdog] {warn}")
+            step_no = int(state.step)
+            if i % log_every == 0 or i == num_steps - 1:
+                last_metrics = {
+                    k: float(v) for k, v in metrics.items()
+                }
+                log_fn(
+                    f"step {step_no}: "
+                    + " ".join(f"{k}={v:.4f}" for k, v in last_metrics.items())
+                    + f" ({dt*1e3:.0f} ms)"
+                )
+            if self.ckpt is not None and step_no % self.ckpt_every == 0:
+                self.ckpt.save(step_no, state)
+        if self.ckpt is not None:
+            self.ckpt.save(int(state.step), state)
+            self.ckpt.wait()
+        return state, last_metrics

@@ -1,0 +1,125 @@
+"""Attention-implementation equivalences: chunked==full, ring==full cache,
+MLA absorbed==naive, sliding-window masking."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention
+from repro.models.config import ModelConfig
+
+RNG = np.random.default_rng(7)
+
+
+def _qkv(B=2, Lq=16, Lk=16, Kv=2, G=2, D=8):
+    q = jnp.asarray(RNG.normal(0, 1, (B, Lq, Kv, G, D)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(0, 1, (B, Lk, Kv, D)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (B, Lk, Kv, D)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(Lq), (B, Lq))
+    kpos = jnp.broadcast_to(jnp.arange(Lk), (B, Lk))
+    return q, k, v, pos, kpos
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("chunk", [3, 8, 16, 64])
+def test_chunked_equals_full(window, chunk):
+    q, k, v, pos, kpos = _qkv()
+    full = attention.attend_full(
+        q, k, v, pos, kpos, window=window, scale=0.35
+    )
+    chunked = attention.attend_chunked(
+        q, k, v, pos, kpos, window=window, scale=0.35, chunk=chunk
+    )
+    np.testing.assert_allclose(
+        np.asarray(full), np.asarray(chunked), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_chunked_unrolled_equals_scan():
+    q, k, v, pos, kpos = _qkv(Lk=32)
+    a = attention.attend_chunked(
+        q, k, v, pos, kpos, window=None, scale=0.3, chunk=8, unroll=False
+    )
+    b = attention.attend_chunked(
+        q, k, v, pos, kpos, window=None, scale=0.3, chunk=8, unroll=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_causal_mask_no_future_leak():
+    """Changing future K/V must not change current outputs."""
+    q, k, v, pos, kpos = _qkv(Lq=8, Lk=8)
+    out1 = attention.attend_full(q, k, v, pos, kpos, window=None, scale=1.0)
+    k2 = k.at[:, 5:].set(99.0)
+    v2 = v.at[:, 5:].set(-99.0)
+    out2 = attention.attend_full(q, k2, v2, pos, kpos, window=None, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :5]), np.asarray(out2[:, :5]), rtol=1e-6
+    )
+
+
+def test_sliding_window_ignores_old_tokens():
+    q, k, v, pos, kpos = _qkv(Lq=10, Lk=10)
+    w = 3
+    out1 = attention.attend_full(q, k, v, pos, kpos, window=w, scale=1.0)
+    # poison everything older than the window of the last query
+    k2 = k.at[:, :3].set(50.0)
+    v2 = v.at[:, :3].set(-50.0)
+    out2 = attention.attend_full(q, k2, v2, pos, kpos, window=w, scale=1.0)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, -1]), np.asarray(out2[:, -1]), rtol=1e-6
+    )
+
+
+def _swa_cfg(window):
+    return ModelConfig(
+        num_layers=1, d_model=32, num_heads=4, num_kv_heads=2, head_dim=8,
+        d_ff=64, vocab_size=64, attention_kind="swa", window=window,
+        dtype="float32",
+    )
+
+
+def test_ring_cache_decode_matches_full_forward():
+    """Ring-buffer (window) decode == teacher-forced SWA attention."""
+    cfg = _swa_cfg(window=4)
+    p, _ = attention.gqa_init(jax.random.PRNGKey(0), cfg)
+    B, L = 2, 12
+    x = jnp.asarray(RNG.normal(0, 0.5, (B, L, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    ref = attention.gqa_forward(p, x, pos, cfg)
+
+    Lp = 6
+    _, cache = attention.gqa_prefill(p, x[:, :Lp], pos[:, :Lp], cfg, L)
+    outs = []
+    for t in range(Lp, L):
+        o, cache = attention.gqa_decode(
+            p, x[:, t : t + 1], jnp.full((B,), t, jnp.int32), cache, cfg
+        )
+        outs.append(o)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(ref[:, Lp:]), np.asarray(got), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_mla_absorbed_equals_naive():
+    cfg = ModelConfig(
+        num_layers=1, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=64, vocab_size=64, mla=True, q_lora_rank=32, kv_lora_rank=16,
+        qk_nope_head_dim=8, qk_rope_head_dim=4, v_head_dim=8,
+        dtype="float32", head_dim=12,
+    )
+    p, _ = attention.mla_init(jax.random.PRNGKey(0), cfg)
+    B, L = 2, 10
+    x = jnp.asarray(RNG.normal(0, 0.5, (B, L, 64)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    naive = attention.mla_forward(p, x, pos, cfg, absorb=False)
+    absorbed = attention.mla_forward(p, x, pos, cfg, absorb=True)
+    np.testing.assert_allclose(
+        np.asarray(naive), np.asarray(absorbed), rtol=2e-4, atol=2e-4
+    )

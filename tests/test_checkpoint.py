@@ -1,0 +1,85 @@
+"""Checkpoint manager: atomicity, keep-N, auto-resume, structure checks."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4)), "b": jnp.zeros((4,))},
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree(3)
+    mgr.save(3, tree)
+    step, restored = mgr.restore_latest(_tree(0))
+    assert step == 3
+    np.testing.assert_allclose(
+        np.asarray(restored["params"]["w"]), np.asarray(tree["params"]["w"])
+    )
+    assert int(restored["step"]) == 3
+
+
+def test_keep_n_garbage_collection(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    step, restored = mgr.restore_latest(_tree())
+    assert step is None and restored is None
+
+
+def test_corrupt_partial_checkpoint_ignored(tmp_path):
+    """A crash mid-write leaves a dir without manifest; it must be skipped
+    (atomicity contract)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1))
+    os.makedirs(tmp_path / "step_0000000002")  # no manifest -> partial
+    assert mgr.latest_step() == 1
+    step, _ = mgr.restore_latest(_tree())
+    assert step == 1
+
+
+def test_structure_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    bad = {"params": {"w": jnp.zeros((8, 4))}, "step": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError, match="mismatch"):
+        mgr.restore(1, bad)
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(7, _tree(7))
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def test_elastic_restore_dtype_cast(tmp_path):
+    """Restore casts to the target tree's dtypes (elastic/mixed-precision
+    resume)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    like = {
+        "params": {
+            "w": jnp.zeros((8, 4), jnp.bfloat16),
+            "b": jnp.zeros((4,)),
+        },
+        "step": jnp.zeros((), jnp.int32),
+    }
+    restored = mgr.restore(1, like)
+    assert restored["params"]["w"].dtype == jnp.bfloat16

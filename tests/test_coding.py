@@ -1,0 +1,67 @@
+"""Input-coding tests (paper §3.2) incl. hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import coding
+
+
+def test_rate_coding_matches_intensity():
+    """Fig. 2: spike frequency tracks pixel intensity (0 / 0.5 / 1)."""
+    key = jax.random.PRNGKey(0)
+    x = jnp.asarray([0.0, 0.5, 1.0])
+    spikes = coding.rate_encode(key, x, num_steps=2000)
+    rates = np.asarray(spikes.mean(axis=0))
+    assert rates[0] == 0.0
+    assert abs(rates[1] - 0.5) < 0.05
+    assert rates[2] == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    p=st.floats(0.0, 1.0),
+    T=st.integers(1, 64),
+)
+def test_deterministic_rate_spike_count(p, T):
+    """Deterministic encoder emits exactly round-ish(p*T) spikes."""
+    spikes = coding.rate_encode_deterministic(jnp.asarray([p]), T)
+    n = float(np.asarray(spikes).sum())
+    assert abs(n - p * T) <= 1.0
+
+
+def test_ttfs_brighter_fires_earlier():
+    x = jnp.asarray([0.1, 0.5, 0.9])
+    spikes = np.asarray(coding.ttfs_encode(x, 32))
+    t_fire = spikes.argmax(axis=0)
+    assert t_fire[2] < t_fire[1] < t_fire[0]
+    assert spikes.sum(axis=0).max() <= 1  # at most one spike each
+
+
+def test_ttfs_zero_never_fires():
+    spikes = np.asarray(coding.ttfs_encode(jnp.asarray([0.0]), 16))
+    assert spikes.sum() == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1.0, 1.0), min_size=2, max_size=40))
+def test_delta_encoding_tracks_signal(sig):
+    """Accumulated delta spikes reconstruct the signal within threshold."""
+    thr = 0.1
+    x = jnp.asarray(sig)[:, None]
+    spikes = coding.delta_encode(x, threshold=thr)
+    recon = np.cumsum(np.asarray(spikes)[:, 0]) * thr
+    # reconstruction error bounded by threshold (plus slack for cumulative
+    # quantization before the tracker catches up on big jumps)
+    final_err = abs(recon[-1] - sig[-1])
+    assert final_err <= thr + max(
+        abs(np.diff(np.asarray(sig), prepend=0.0)).max(), thr
+    )
+
+
+def test_spike_trains_are_binary():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.uniform(key, (8, 8))
+    spikes = coding.rate_encode(key, x, 25)
+    assert set(np.unique(np.asarray(spikes))) <= {0.0, 1.0}

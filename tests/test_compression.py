@@ -1,0 +1,67 @@
+"""Gradient compression with error feedback: bias vanishes over steps and
+training converges like the uncompressed optimizer."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import compression
+from repro.optim import sgd
+from repro.optim.adam import apply_updates
+
+
+def test_int8_quant_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (128,)))
+    codes, scale = compression.quantize_int8(x)
+    back = compression.dequantize_int8(codes, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) / 2 + 1e-6
+
+
+def test_error_feedback_carries_residual():
+    g = {"w": jnp.asarray([1e-4, 2e-4, -1e-4])}  # tiny grads -> coarse grid
+    e0 = {"w": jnp.zeros(3)}
+    deq, err = compression.compress_tree(g, e0)
+    # whatever was lost is carried
+    np.testing.assert_allclose(
+        np.asarray(deq["w"] + err["w"]), np.asarray(g["w"]), rtol=1e-6
+    )
+
+
+def test_compressed_sgd_converges_on_quadratic():
+    """min ||x - t||^2: EF-compressed SGD reaches the optimum."""
+    t = jnp.asarray(np.random.default_rng(1).normal(0, 1, (32,)))
+
+    def loss(x):
+        return jnp.sum((x - t) ** 2)
+
+    opt_c = compression.compressed(sgd(0.05, momentum=0.0))
+    x = jnp.zeros(32)
+    state = opt_c.init(x)
+    for _ in range(200):
+        g = jax.grad(loss)(x)
+        upd, state = opt_c.update(g, state)
+        x = apply_updates(x, upd)
+    assert float(loss(x)) < 1e-3
+
+
+def test_compression_tracks_uncompressed_trajectory():
+    t = jnp.asarray(np.random.default_rng(2).normal(0, 1, (16,)))
+
+    def loss(x):
+        return jnp.sum((x - t) ** 2)
+
+    xs = {}
+    for name, opt in [
+        ("plain", sgd(0.1, momentum=0.0)),
+        ("ef", compression.compressed(sgd(0.1, momentum=0.0))),
+    ]:
+        x = jnp.zeros(16)
+        state = opt.init(x)
+        for _ in range(50):
+            g = jax.grad(loss)(x)
+            upd, state = opt.update(g, state)
+            x = apply_updates(x, upd)
+        xs[name] = x
+    np.testing.assert_allclose(
+        np.asarray(xs["ef"]), np.asarray(xs["plain"]), atol=5e-2
+    )

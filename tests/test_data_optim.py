@@ -1,0 +1,97 @@
+"""Data pipeline + optimizer unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import collision, tokens
+from repro.optim import adam, adamw, chain_clip, global_norm, sgd
+from repro.optim.adam import apply_updates
+
+
+# ---------------------------------------------------------------- data
+def test_collision_dataset_reproducible_and_balanced():
+    cfg = collision.CollisionConfig(image_hw=16, num_train=256, num_test=64)
+    a = collision.generate(cfg)
+    b = collision.generate(cfg)
+    np.testing.assert_array_equal(a[0], b[0])
+    assert a[0].min() >= 0.0 and a[0].max() <= 1.0
+    frac = a[1].mean()
+    assert 0.3 < frac < 0.7  # roughly balanced labels
+
+
+def test_collision_classes_are_separable_by_pixelsum():
+    """Collision scenes contain a large dark obstacle -> lower mean
+    brightness on average (the cue is visual, not metadata)."""
+    cfg = collision.CollisionConfig(image_hw=32, num_train=512, num_test=0)
+    x, y, _, _ = collision.generate(cfg)
+    m1 = x[y == 1].mean()
+    m0 = x[y == 0].mean()
+    assert m1 < m0
+
+
+def test_markov_stream_host_sharding():
+    c0 = tokens.TokenStreamConfig(vocab_size=97, seq_len=32, batch_size=2,
+                                  host_id=0, num_hosts=2)
+    c1 = tokens.TokenStreamConfig(vocab_size=97, seq_len=32, batch_size=2,
+                                  host_id=1, num_hosts=2)
+    x0, _ = next(tokens.MarkovTokenStream(c0).batches())
+    x1, _ = next(tokens.MarkovTokenStream(c1).batches())
+    assert not np.array_equal(x0, x1)  # disjoint host feeds
+    assert x0.max() < 97
+
+
+def test_markov_stream_is_learnable_structure():
+    """Transitions are deterministic 85% of the time -> entropy below
+    uniform; a model can learn it (used by train-loop tests)."""
+    cfg = tokens.TokenStreamConfig(vocab_size=31, seq_len=512, batch_size=1)
+    x, y = next(tokens.MarkovTokenStream(cfg).batches())
+    pairs = {}
+    for a, b in zip(x[0], y[0]):
+        pairs.setdefault(int(a), []).append(int(b))
+    agree = [
+        max(np.bincount(v).max() / len(v), 0)
+        for v in pairs.values() if len(v) >= 5
+    ]
+    assert np.mean(agree) > 0.6
+
+
+# --------------------------------------------------------------- optim
+def test_adam_matches_closed_form_first_step():
+    """After one step from zero moments, Adam moves by -lr*sign-ish."""
+    opt = adam(lr=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    p = jnp.asarray([1.0, -2.0])
+    g = jnp.asarray([0.5, -0.5])
+    state = opt.init(p)
+    upd, state = opt.update(g, state, p)
+    # bias-corrected first step: -lr * g/|g| (approximately)
+    np.testing.assert_allclose(np.asarray(upd), [-0.1, 0.1], rtol=1e-4)
+
+
+def test_adam_converges_quadratic():
+    t = jnp.asarray(np.random.default_rng(0).normal(0, 1, (16,)))
+    opt = adam(5e-2)
+    x = jnp.zeros(16)
+    s = opt.init(x)
+    for _ in range(300):
+        g = jax.grad(lambda x: jnp.sum((x - t) ** 2))(x)
+        u, s = opt.update(g, s, x)
+        x = apply_updates(x, u)
+    assert float(jnp.sum((x - t) ** 2)) < 1e-3
+
+
+def test_adamw_decays_weights():
+    opt = adamw(lr=0.1, weight_decay=0.5)
+    p = jnp.asarray([10.0])
+    s = opt.init(p)
+    u, s = opt.update(jnp.asarray([0.0]), s, p)
+    assert float(u[0]) < 0  # pure decay pulls towards zero
+
+
+def test_clip_bounds_update_norm():
+    opt = chain_clip(sgd(1.0, momentum=0.0), max_norm=1.0)
+    p = jnp.zeros(4)
+    s = opt.init(p)
+    huge = jnp.full((4,), 100.0)
+    u, s = opt.update(huge, s, p)
+    assert float(global_norm(u)) <= 1.0 + 1e-5

@@ -1,0 +1,114 @@
+"""Dry-run machinery unit tests (no 512-device compile here — the real
+sweep is `python -m repro.launch.dryrun --all`, cached under
+experiments/dryrun/)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+from repro.launch import shapes as shp
+
+
+def _parse(hlo):
+    # repro.launch.dryrun sets XLA_FLAGS at import time; lock the device
+    # count to 1 first so the flag cannot affect this pytest process.
+    jax.devices()
+    from repro.launch import dryrun
+
+    return dryrun.parse_collectives(hlo)
+
+
+HLO = """
+  %ag = bf16[16,4096]{1,0} all-gather(%x), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = f32[448,1024]{1,0} all-reduce(%y), replica_groups=[16,32]<=[512]T(1,0), to_apply=%add
+  %cp = f32[8,128]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %rs = f32[28,1024]{1,0} reduce-scatter(%w), replica_groups=[32,16]<=[512], dimensions={0}
+  %tup = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%a, %b), replica_groups=[64,8]<=[512]
+"""
+
+
+def test_parse_collectives_counts_and_traffic():
+    res = _parse(HLO)
+    ops = res["ops"]
+    assert ops["all-gather"]["count"] == 1
+    assert ops["all-reduce"]["count"] == 1
+    assert ops["collective-permute"]["count"] == 1
+    assert ops["reduce-scatter"]["count"] == 1
+    assert ops["all-to-all"]["count"] == 1
+    ag_bytes = 16 * 4096 * 2
+    assert ops["all-gather"]["result_bytes"] == ag_bytes
+    assert abs(ops["all-gather"]["traffic_bytes"] - ag_bytes * 15 / 16) < 1
+    ar_bytes = 448 * 1024 * 4
+    assert abs(ops["all-reduce"]["traffic_bytes"] - 2 * ar_bytes * 31 / 32) < 1
+    rs_bytes = 28 * 1024 * 4
+    assert ops["reduce-scatter"]["traffic_bytes"] == rs_bytes * 15
+    a2a_bytes = 2 * 4 * 4 * 4
+    assert abs(ops["all-to-all"]["traffic_bytes"] - a2a_bytes * 7 / 8) < 1
+
+
+def test_extrapolation_linear():
+    from repro.launch import dryrun
+
+    c1 = {"flops": 10.0, "bytes": 100.0,
+          "collectives": {"ops": {"all-reduce": {
+              "count": 2, "result_bytes": 10.0, "traffic_bytes": 20.0}},
+              "traffic_bytes": 20.0}}
+    c2 = {"flops": 30.0, "bytes": 300.0,
+          "collectives": {"ops": {"all-reduce": {
+              "count": 6, "result_bytes": 30.0, "traffic_bytes": 60.0}},
+              "traffic_bytes": 60.0}}
+    ext = dryrun._extrapolate(c1, c2, 1, 3, 10)
+    assert ext["flops"] == 10 + 10 * 9  # base 0 + 10/layer
+    assert ext["collectives"]["traffic_bytes"] == 20 * 10
+
+
+def test_long500k_skip_policy():
+    skips = {a: shp.runnable(configs.get(a), "long_500k")[0]
+             for a in configs.ARCH_IDS}
+    assert skips["mamba2-130m"] is True  # SSM
+    assert skips["recurrentgemma-2b"] is True  # hybrid
+    assert skips["mixtral-8x7b"] is True  # SWA
+    for full_attn in ("yi-34b", "stablelm-1.6b", "codeqwen1.5-7b",
+                      "minicpm3-4b", "phi-3-vision-4.2b", "musicgen-medium",
+                      "granite-moe-1b-a400m"):
+        assert skips[full_attn] is False, full_attn
+
+
+@pytest.mark.parametrize("shape", list(shp.SHAPES))
+def test_input_specs_shapes(shape):
+    cfg = configs.get("stablelm-1.6b")
+    kind, inputs, axes = shp.batch_specs(cfg, shape)
+    sp = shp.SHAPES[shape]
+    if kind == "train":
+        assert inputs["tokens"].shape == (sp.global_batch, sp.seq_len)
+        assert inputs["tokens"].dtype == jnp.int32
+    elif kind == "decode":
+        assert inputs["token"].shape == (sp.global_batch, 1)
+        assert inputs["pos"].shape == (sp.global_batch,)
+    assert set(inputs) == set(axes)
+
+
+def test_vlm_input_specs_include_image_embeds():
+    cfg = configs.get("phi-3-vision-4.2b")
+    _, inputs, _ = shp.batch_specs(cfg, "train_4k")
+    assert "img_embeds" in inputs
+    assert inputs["img_embeds"].shape[1] == 576
+    # text + image positions == assigned seq_len
+    assert inputs["tokens"].shape[1] + 576 == 4096
+
+
+def test_audio_input_specs_have_codebooks():
+    cfg = configs.get("musicgen-medium")
+    _, inputs, _ = shp.batch_specs(cfg, "train_4k")
+    assert inputs["tokens"].shape == (256, 4096, 4)
+
+
+def test_abstract_cache_no_allocation():
+    cfg = configs.get("mixtral-8x7b")
+    cache = shp.abstract_cache(cfg, "long_500k")
+    leaves = jax.tree_util.tree_leaves(cache)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # SWA ring cache is bounded by the window, not 500k
+    k = cache["main"]["b0"]["k"]
+    assert k.shape[2] == cfg.window

@@ -1,0 +1,93 @@
+"""Energy-model tests (paper Table 2/3 analog).
+
+The analytically-defensible form of the paper's claim is *energy per
+inference*: the task-specialized event-driven SNN does orders of
+magnitude fewer ops per classification than the generic BCNN baseline
+[36] at its published scale (~2 GOP/frame).  GOPS/W per-op comparisons
+reward cheap ops rather than less work — see EXPERIMENTS.md §Energy-notes
+for the full discussion (including the honest finding that 25-step rate
+coding does NOT beat a single dense 16-bit pass of the same MLP on
+weight-traffic grounds).
+"""
+
+import numpy as np
+
+from repro.core import bcnn, energy
+
+
+def _snn_ops(rates=(0.35, 0.02, 0.02)):
+    """Trained-network rates: pixel-intensity input rate ~0.35,
+    hidden/output rates a few %."""
+    return energy.snn_inference_ops(
+        layer_sizes=(4096, 512, 2), num_steps=25, spike_rates=rates
+    )
+
+
+def test_snn_beats_bcnn_baseline_energy_per_inference():
+    """Paper Table 2 analog: vs the BCNN [36] at its published per-frame
+    op count, the SNN uses ~8x less energy per classification."""
+    reduction = energy.energy_reduction(_snn_ops(), energy.bcnn36_inference_ops())
+    assert reduction > 0.75, reduction  # paper: 0.86
+
+
+def test_energy_reduction_tracks_paper_magnitude():
+    red = energy.energy_reduction(_snn_ops(), energy.bcnn36_inference_ops())
+    assert 0.75 < red < 0.98  # paper reports 0.86 on measured watts
+
+
+def test_event_driven_saves_energy():
+    dense = energy.snn_inference_ops(
+        (4096, 512, 2), 25, (1.0, 1.0, 1.0), event_driven=False
+    )
+    sparse = energy.snn_inference_ops(
+        (4096, 512, 2), 25, (0.1, 0.05, 0.02), event_driven=True
+    )
+    assert sparse.energy_pj() < 0.2 * dense.energy_pj()
+
+
+def test_add_cheaper_than_mac_per_op():
+    """§4.3's per-op claim: the cascaded adder's int add costs far less
+    than the 16-bit MAC it replaces."""
+    e = energy.ENERGY_PJ
+    assert e["add_i32"] < (e["mul_i16"] + e["add_i32"]) / 3
+
+
+def test_rate_coding_traffic_caveat():
+    """Honest finding (documented): at input rate ~0.35 over 25 steps the
+    SNN re-fetches weights ~8.75x a single dense pass — the same-arch
+    16-bit FCN costs LESS per inference.  The SNN's win in the paper is
+    vs the much larger CNN, not vs its own dense twin."""
+    snn = _snn_ops()
+    fcn = energy.dense_fcn_inference_ops((4096, 512, 2))
+    assert fcn.energy_pj() < snn.energy_pj()
+
+
+def test_paper_86pct_claim_shape():
+    """(1093-143)/1093 = 86.9% — the gain formula reproduces the paper's
+    arithmetic on the paper's own reported numbers."""
+
+    class Fake:
+        def __init__(self, gopsw):
+            self._g = gopsw
+
+        def gops_per_watt(self):
+            return self._g
+
+    assert abs(energy.efficiency_gain(Fake(1093), Fake(143)) - 0.869) < 1e-2
+
+
+def test_small_bcnn_op_model_consistent():
+    conv, fc = bcnn.conv_shapes_for_energy(bcnn.BCNNConfig())
+    ops = energy.bcnn_inference_ops(conv, fc)
+    assert ops.total_ops() > 0
+    assert ops.energy_pj() > 0
+
+
+def test_opcount_bookkeeping():
+    c = energy.OpCount()
+    c.add("add_i32", 10)
+    c.add("add_i32", 5)
+    c.add("sram_64b", 3)
+    assert c.ops["add_i32"] == 15
+    assert c.total_ops() == 15  # memory accesses are not compute ops
+    assert c.energy_pj() == 15 * 0.1 + 3 * 5.0

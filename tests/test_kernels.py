@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)
++ hypothesis properties.  Every kernel must match its ref bit-exactly
+(integer paths) or to float tolerance (LIF)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------- lif_fused
+@pytest.mark.parametrize("T,B,N", [(1, 1, 1), (7, 3, 50), (25, 8, 128),
+                                   (25, 5, 200), (3, 16, 384)])
+@pytest.mark.parametrize("refrac,reset", [(0, "zero"), (5, "zero"),
+                                          (2, "subtract")])
+def test_lif_fused_matches_ref(T, B, N, refrac, reset):
+    cur = jnp.asarray(RNG.normal(0, 0.7, (T, B, N)).astype(np.float32))
+    beta = jnp.asarray(RNG.uniform(0.5, 0.99, N).astype(np.float32))
+    thr = jnp.asarray(RNG.uniform(0.5, 1.5, N).astype(np.float32))
+    s_k, u_k = ops.lif_fused(
+        cur, beta, thr, refractory_steps=refrac, reset=reset
+    )
+    s_r, u_r = ref.lif_fused_ref(
+        cur, beta, thr, refractory_steps=refrac, reset=reset
+    )
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_allclose(
+        np.asarray(u_k), np.asarray(u_r), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_lif_fused_matches_core_neuron():
+    """Kernel semantics == core.neuron scan semantics (inference)."""
+    from repro.core import neuron
+
+    T, B, N = 25, 4, 64
+    cur = jnp.asarray(RNG.normal(0, 0.7, (T, B, N)).astype(np.float32))
+    beta = jnp.asarray(RNG.uniform(0.5, 0.99, N).astype(np.float32))
+    thr = jnp.asarray(RNG.uniform(0.5, 1.5, N).astype(np.float32))
+    s_k, _ = ops.lif_fused(cur, beta, thr, refractory_steps=5)
+    cfg = neuron.NeuronConfig(kind="lif", refractory_steps=5, surrogate="boxcar")
+    s_c, _ = neuron.run_neuron(cfg, cur, beta=beta, threshold=thr)
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_c))
+
+
+# ---------------------------------------------------------- spike_matmul
+@pytest.mark.parametrize("M,K,N", [(1, 1, 1), (5, 300, 70), (128, 128, 128),
+                                   (37, 4096, 12), (130, 513, 129)])
+def test_spike_matmul_matches_ref(M, K, N):
+    spk = jnp.asarray((RNG.random((M, K)) < 0.15).astype(np.int8))
+    wq = jnp.asarray(
+        RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16)
+    )
+    out = ops.spike_matmul(spk, wq)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(ref.spike_matmul_ref(spk, wq))
+    )
+
+
+def test_spike_matmul_zero_spikes_zero_output():
+    spk = jnp.zeros((16, 256), jnp.int8)
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (256, 32)).astype(np.int16))
+    assert np.all(np.asarray(ops.spike_matmul(spk, wq)) == 0)
+
+
+def test_spike_matmul_fits_28bit_accumulator():
+    """All-ones spikes x max-magnitude weights at fan-in 4096 stays within
+    the paper's 28-bit intermediate (int32 accumulator never overflows)."""
+    spk = jnp.ones((2, 4096), jnp.int8)
+    wq = jnp.full((4096, 8), -(2**15), jnp.int16)
+    out = np.asarray(ops.spike_matmul(spk, wq))
+    expected = -(2**15) * 4096  # = -2^27: 28-bit signed range
+    assert np.all(out == expected)
+    assert abs(expected) < 2**31
+
+
+# ----------------------------------------------------------- q115_matmul
+@pytest.mark.parametrize("M,K,N", [(1, 1, 1), (33, 129, 65), (128, 128, 128),
+                                   (16, 4096, 8)])
+@pytest.mark.parametrize("saturate", [True, False])
+def test_q115_matmul_matches_ref(M, K, N, saturate):
+    xq = jnp.asarray(RNG.integers(-(2**15), 2**15, (M, K)).astype(np.int16))
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16))
+    out = ops.q115_matmul(xq, wq, saturate=saturate)
+    want = (
+        ref.q115_matmul_ref(xq, wq)
+        if saturate
+        else ref.q115_matmul_acc_ref(xq, wq)
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 9), k=st.integers(1, 33), n=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_q115_matmul_property(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    xq = jnp.asarray(r.integers(-(2**15), 2**15, (m, k)).astype(np.int16))
+    wq = jnp.asarray(r.integers(-(2**15), 2**15, (k, n)).astype(np.int16))
+    np.testing.assert_array_equal(
+        np.asarray(ops.q115_matmul(xq, wq)),
+        np.asarray(ref.q115_matmul_ref(xq, wq)),
+    )
+
+
+def test_q115_matmul_approximates_float():
+    """Quantized matmul tracks the float product within quant noise."""
+    x = RNG.uniform(-0.9, 0.9, (8, 64)).astype(np.float32)
+    w = RNG.uniform(-0.1, 0.1, (64, 16)).astype(np.float32)
+    xq, wq = quant.quantize(jnp.asarray(x)), quant.quantize(jnp.asarray(w))
+    out_q = np.asarray(ops.q115_matmul(xq, wq)).astype(np.float32) / 2**15
+    np.testing.assert_allclose(out_q, x @ w, atol=64 * 2**-15)
+
+
+# -------------------------------------------------------- composed layer
+def test_snn_layer_forward_matches_float_oracle():
+    """Fig. 5 pipeline (spike_matmul -> bias -> lif_fused) == float graph
+    with fake-quant weights."""
+    T, B, K, N = 9, 3, 200, 40
+    w = jnp.asarray(RNG.uniform(-0.05, 0.05, (K, N)).astype(np.float32))
+    b = jnp.asarray(RNG.uniform(-0.02, 0.02, N).astype(np.float32))
+    beta = jnp.asarray(RNG.uniform(0.6, 0.95, N).astype(np.float32))
+    thr = jnp.asarray(RNG.uniform(0.4, 1.1, N).astype(np.float32))
+    spikes = jnp.asarray((RNG.random((T, B, K)) < 0.2).astype(np.float32))
+    out_hw = ops.snn_layer_forward(spikes, w, b, beta, thr)
+    cur = spikes @ quant.fake_quant(w) + quant.fake_quant(b)
+    out_ref, _ = ref.lif_fused_ref(cur, beta, thr)
+    np.testing.assert_array_equal(np.asarray(out_hw), np.asarray(out_ref))

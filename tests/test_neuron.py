@@ -1,0 +1,110 @@
+"""Unit tests for LIF / Lapicque dynamics (paper Eqs. 1-2/4, §4.2.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import neuron
+
+
+def _run(kind="lif", refrac=0, reset="zero", currents=None, beta=0.9, thr=1.0):
+    cfg = neuron.NeuronConfig(
+        kind=kind, reset=reset, refractory_steps=refrac
+    )
+    spikes, state = neuron.run_neuron(
+        cfg, currents, beta=jnp.asarray(beta), threshold=jnp.asarray(thr)
+    )
+    return np.asarray(spikes), state
+
+
+def test_lif_decay_no_input():
+    """With zero input the membrane decays geometrically (beta factor)."""
+    cfg = neuron.NeuronConfig(kind="lif")
+    st = neuron.NeuronState(u=jnp.ones((1,)), refrac=jnp.zeros((1,), jnp.int32))
+    st, _ = neuron.neuron_step(
+        cfg, st, jnp.zeros((1,)), beta=jnp.asarray(0.5), threshold=jnp.asarray(10.0)
+    )
+    assert np.allclose(st.u, 0.5)
+    st, _ = neuron.neuron_step(
+        cfg, st, jnp.zeros((1,)), beta=jnp.asarray(0.5), threshold=jnp.asarray(10.0)
+    )
+    assert np.allclose(st.u, 0.25)
+
+
+def test_lapicque_integrates_without_leak():
+    """Lapicque (Eq. 1): pure integrator, no decay."""
+    cur = jnp.full((10, 1), 0.3)
+    spikes, state = _run("lapicque", currents=cur, thr=100.0)
+    assert np.allclose(state.u, 3.0, atol=1e-6)
+    assert spikes.sum() == 0
+
+
+def test_lif_threshold_and_reset_zero():
+    """Eq. 2: on spike the membrane resets to zero."""
+    cur = jnp.concatenate([jnp.full((1, 1), 2.0), jnp.zeros((3, 1))])
+    spikes, state = _run("lif", currents=cur, thr=1.0, beta=0.9)
+    assert spikes[0, 0] == 1.0  # immediate spike (2.0 > 1.0)
+    # after reset-to-zero and zero input, u stays 0
+    assert np.allclose(state.u, 0.0, atol=1e-6)
+
+
+def test_reset_subtract():
+    cur = jnp.full((1, 1), 1.5)
+    cfg = neuron.NeuronConfig(kind="lif", reset="subtract")
+    st = neuron.init_state((1,))
+    st, spk = neuron.neuron_step(
+        cfg, st, cur[0], beta=jnp.asarray(0.9), threshold=jnp.asarray(1.0)
+    )
+    assert spk[0] == 1.0
+    assert np.allclose(st.u, 0.5)  # 1.5 - thr
+
+
+def test_refractory_suppresses_firing():
+    """Paper §4.2.2: after a spike the neuron is silent for R steps."""
+    T = 12
+    cur = jnp.full((T, 1), 2.0)  # would fire every step without refractory
+    spikes_no, _ = _run("lif", refrac=0, currents=cur)
+    spikes_r5, _ = _run("lif", refrac=5, currents=cur)
+    assert spikes_no.sum() == T
+    # with refractory 5: fires at t=0, 6, ... -> every 6th step
+    fired = np.where(spikes_r5[:, 0] > 0)[0]
+    assert fired[0] == 0
+    assert np.all(np.diff(fired) >= 6)
+
+
+def test_spike_rate_monotone_in_current():
+    """Stronger input -> higher firing rate (sanity of dynamics)."""
+    T = 50
+    rates = []
+    for amp in (0.2, 0.5, 1.0):
+        cur = jnp.full((T, 1), amp)
+        spikes, _ = _run("lif", currents=cur, thr=1.0, beta=0.8)
+        rates.append(spikes.mean())
+    assert rates[0] <= rates[1] <= rates[2]
+    assert rates[2] > 0
+
+
+def test_surrogate_gradient_nonzero_near_threshold():
+    """BPTT trainability: dL/dbeta exists and is finite."""
+
+    def loss(beta):
+        cfg = neuron.NeuronConfig(kind="lif")
+        cur = jnp.full((5, 4), 0.6)
+        spikes, _ = neuron.run_neuron(
+            cfg, cur, beta=beta, threshold=jnp.asarray(1.0)
+        )
+        return jnp.sum(spikes)
+
+    g = jax.grad(loss)(jnp.asarray(0.9))
+    assert np.isfinite(g)
+    assert g != 0.0
+
+
+@pytest.mark.parametrize("surr", ["atan", "fast_sigmoid", "boxcar"])
+def test_surrogates_forward_exact(surr):
+    from repro.core import surrogate
+
+    fn = surrogate.get(surr)
+    x = jnp.asarray([-1.0, -0.01, 0.0, 0.01, 1.0])
+    np.testing.assert_array_equal(fn(x), (x >= 0).astype(jnp.float32))

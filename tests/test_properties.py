@@ -1,0 +1,108 @@
+"""Cross-cutting hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh
+
+from repro.core import coding, energy, neuron
+from repro.distributed import partitioning as pt
+
+
+def _mesh(shape, axes):
+    devs = np.array(jax.devices()[:1] * int(np.prod(shape))).reshape(shape)
+    return Mesh(devs, axes)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 512), min_size=1, max_size=4),
+    names=st.lists(
+        st.sampled_from(
+            ["batch", "embed", "heads", "mlp", "vocab", "seq", None]
+        ),
+        min_size=1, max_size=4,
+    ),
+    dshape=st.sampled_from([(2, 4), (4, 2), (8, 1)]),
+)
+def test_spec_always_valid(dims, names, dshape):
+    """Invariants of spec_for on arbitrary shapes/axes:
+    1. every assigned mesh axis divides its dim,
+    2. no mesh axis is used twice,
+    3. spec rank never exceeds array rank."""
+    n = min(len(dims), len(names))
+    dims, names = dims[:n], names[:n]
+    mesh = _mesh(dshape, ("data", "model"))
+    spec = pt.spec_for(dims, names, mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used = []
+    for dim, part in zip(dims, tuple(spec) + (None,) * (n - len(spec))):
+        parts = (
+            () if part is None
+            else (part,) if isinstance(part, str) else tuple(part)
+        )
+        total = int(np.prod([sizes[p] for p in parts])) if parts else 1
+        assert dim % total == 0
+        used.extend(parts)
+    assert len(used) == len(set(used))
+    assert len(spec) <= n
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    T=st.integers(1, 40),
+    beta=st.floats(0.01, 0.99),
+    amp=st.floats(0.0, 3.0),
+)
+def test_membrane_bounded_by_geometric_sum(T, beta, amp):
+    """|U| <= amp / (1 - beta) for constant input of magnitude amp
+    (before reset, the LIF integrator's fixed-point bound)."""
+    cfg = neuron.NeuronConfig(kind="lif")
+    cur = jnp.full((T, 1), amp)
+    _, state = neuron.run_neuron(
+        cfg, cur, beta=jnp.asarray(beta), threshold=jnp.asarray(1e9)
+    )
+    bound = amp / (1.0 - beta) + 1e-4
+    assert abs(float(state.u[0])) <= bound
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rates=st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3),
+    scale=st.floats(0.1, 0.9),
+)
+def test_energy_monotone_in_spike_rates(rates, scale):
+    """Event-driven energy is monotone: scaling all rates down never
+    increases energy (the hardware's core economic property)."""
+    hi = energy.snn_inference_ops((256, 64, 2), 10, rates)
+    lo = energy.snn_inference_ops(
+        (256, 64, 2), 10, [r * scale for r in rates]
+    )
+    assert lo.energy_pj() <= hi.energy_pj() + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.floats(0.0, 1.0),
+    T=st.integers(2, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ttfs_never_more_spikes_than_rate_expectation(p, T, seed):
+    """TTFS emits <= 1 spike; rate coding emits ~p*T — the §3.2 energy
+    ordering holds pointwise."""
+    x = jnp.asarray([p])
+    ttfs = float(coding.ttfs_encode(x, T).sum())
+    det = float(coding.rate_encode_deterministic(x, T).sum())
+    assert ttfs <= 1.0
+    assert ttfs <= det + 1e-9 or p * T < 1.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 4096))
+def test_accumulator_bits_monotone(fan_in):
+    from repro.core import quant
+
+    b = quant.accumulator_bits(fan_in)
+    assert b >= 17
+    assert quant.accumulator_bits(fan_in * 2) >= b

@@ -1,0 +1,57 @@
+"""Q1.15 fixed-point tests (paper §4.3) incl. hypothesis properties."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+
+def test_q115_range():
+    f = quant.Q1_15
+    assert f.total_bits == 16
+    assert f.min_val == -1.0
+    assert abs(f.max_val - (1 - 2**-15)) < 1e-12
+    assert f.storage_dtype == jnp.int16
+
+
+def test_paper_28bit_accumulator():
+    """Paper: fan-in 4096 adder tree -> '28-bit intermediate result'."""
+    assert quant.accumulator_bits(4096, quant.Q1_15) == 28
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1.0, 1.0 - 2**-15))
+def test_roundtrip_error_bounded(x):
+    codes = quant.quantize(jnp.asarray([x]))
+    back = float(quant.dequantize(codes)[0])
+    # half an LSB, plus the float32 representation error of the f64 input
+    assert abs(back - x) <= 2**-16 + abs(x) * 2**-23 + 1e-12
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-4.0, 4.0))
+def test_fake_quant_matches_true_path(x):
+    """fake_quant (QAT/pjit path) is bit-exact with quantize->dequantize."""
+    fq = float(quant.fake_quant(jnp.asarray([x]))[0])
+    tq = float(quant.dequantize(quant.quantize(jnp.asarray([x])))[0])
+    assert fq == tq
+
+
+def test_saturation():
+    codes = quant.quantize(jnp.asarray([5.0, -5.0]))
+    np.testing.assert_array_equal(np.asarray(codes), [32767, -32768])
+
+
+def test_quant_params_only_floats():
+    tree = {"w": jnp.asarray([0.1234567]), "i": jnp.asarray([3], jnp.int32)}
+    out = quant.quant_params(tree)
+    assert out["i"].dtype == jnp.int32
+    assert abs(float(out["w"][0]) - 0.1234567) < 2**-15
+
+
+def test_fake_quant_gradient_straight_through():
+    import jax
+
+    g = jax.grad(lambda x: jnp.sum(quant.fake_quant(x)))(jnp.asarray([0.3]))
+    np.testing.assert_allclose(np.asarray(g), [1.0])

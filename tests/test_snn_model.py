@@ -1,0 +1,101 @@
+"""Tests for the paper's SNN model (4096-512-2 family, §4.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coding, snn
+
+
+CFG = snn.SNNConfig(layer_sizes=(64, 32, 2), num_steps=8, dropout_rate=0.2)
+
+
+def _batch(cfg=CFG, B=4, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((B, cfg.layer_sizes[0])).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 2, B).astype(np.int32))
+    key = jax.random.PRNGKey(seed)
+    spikes = coding.rate_encode(key, x, cfg.num_steps)
+    return spikes, y
+
+
+def test_forward_shapes_and_finite():
+    params = snn.init_params(jax.random.PRNGKey(0), CFG)
+    spikes, _ = _batch()
+    mem, spk = snn.forward(params, spikes, CFG, train=False)
+    assert mem.shape == (8, 4, 2)
+    assert spk.shape == (8, 4, 2)
+    assert np.all(np.isfinite(np.asarray(mem)))
+    assert set(np.unique(np.asarray(spk))) <= {0.0, 1.0}
+
+
+@pytest.mark.parametrize("kind", ["lif", "lapicque"])
+def test_loss_decreases(kind):
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, neuron_kind=kind)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    spikes, y = _batch(cfg)
+    from repro.optim import adam
+    from repro.optim.adam import apply_updates
+
+    opt = adam(5e-3)
+    state = opt.init(params)
+    losses = []
+    for i in range(20):
+        (l, _), g = jax.value_and_grad(snn.loss_fn, has_aux=True)(
+            params, spikes, y, cfg, train=True,
+            dropout_key=jax.random.PRNGKey(i),
+        )
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_refractory_variant_reduces_output_rate():
+    import dataclasses
+
+    cfg5 = dataclasses.replace(CFG, refractory_steps=5, num_steps=20)
+    cfg0 = dataclasses.replace(CFG, refractory_steps=0, num_steps=20)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg0)
+    spikes, _ = _batch(cfg0)
+    _, spk0 = snn.forward(params, spikes, cfg0, train=False)
+    _, spk5 = snn.forward(params, spikes, cfg5, train=False)
+    assert np.asarray(spk5).mean() <= np.asarray(spk0).mean() + 1e-9
+
+
+def test_q115_mode_runs_and_stays_close():
+    import dataclasses
+
+    cfgq = dataclasses.replace(CFG, quant_q115=True)
+    params = snn.init_params(jax.random.PRNGKey(0), CFG)
+    spikes, y = _batch()
+    l_f, _ = snn.loss_fn(params, spikes, y, CFG, train=False)
+    l_q, _ = snn.loss_fn(params, spikes, y, cfgq, train=False)
+    assert np.isfinite(float(l_q))
+    assert abs(float(l_q) - float(l_f)) / abs(float(l_f)) < 0.2
+
+
+def test_learnable_beta_stays_in_unit_interval():
+    params = snn.init_params(jax.random.PRNGKey(0), CFG)
+    for lp in params.values():
+        b = np.asarray(snn.effective_beta(lp))
+        assert np.all((b > 0) & (b < 1))
+
+
+def test_paper_config_is_4096_512_2():
+    from repro.configs.collision_snn import CONFIG
+
+    assert tuple(CONFIG.layer_sizes) == (4096, 512, 2)
+    assert CONFIG.num_steps == 25
+    assert CONFIG.neuron_kind == "lif"
+
+
+def test_hidden_spike_rates_bounded():
+    params = snn.init_params(jax.random.PRNGKey(0), CFG)
+    spikes, _ = _batch()
+    rates = np.asarray(snn.hidden_spike_rates(params, spikes, CFG))
+    assert rates.shape == (2,)
+    assert np.all((rates >= 0) & (rates <= 1))

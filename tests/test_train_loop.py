@@ -1,0 +1,105 @@
+"""Trainer: loss decreases, grad accumulation equivalence, watchdog,
+checkpoint/restart."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models.model import Model
+from repro.optim import adam, chain_clip
+from repro.train.loop import StragglerWatchdog, Trainer, make_train_step
+
+
+def _tiny_model():
+    cfg = configs.get("stablelm-1.6b").reduced(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128,
+    )
+    return Model(cfg)
+
+
+def _batches(model, B=4, L=16):
+    from repro.data.tokens import MarkovTokenStream, TokenStreamConfig
+
+    stream = MarkovTokenStream(
+        TokenStreamConfig(
+            vocab_size=model.cfg.vocab_size, seq_len=L, batch_size=B
+        )
+    )
+    for x, y in stream.batches():
+        yield {"tokens": jnp.asarray(x), "targets": jnp.asarray(y)}
+
+
+def test_loss_decreases_on_markov_stream(tmp_path):
+    model = _tiny_model()
+    trainer = Trainer(model, chain_clip(adam(3e-3), 1.0))
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    logs = []
+    state, metrics = trainer.run(
+        state, _batches(model), num_steps=30, log_every=29,
+        log_fn=lambda s: logs.append(s),
+    )
+    first = float(logs[0].split("loss=")[1].split(" ")[0])
+    last = metrics["loss"]
+    assert last < first
+
+
+def test_grad_accumulation_matches_full_batch():
+    """accum_steps=2 over a 2x batch == one step over the full batch.
+
+    Compared through an SGD step (update linear in grads) — Adam's
+    g/sqrt(v) normalization amplifies fp summation-order noise on
+    near-zero grads into O(lr) deltas, which is not what this test is
+    about."""
+    from repro.optim import sgd
+
+    model = _tiny_model()
+    opt = sgd(lr=0.1, momentum=0.0)
+    batch = next(_batches(model, B=8))
+
+    s1 = make_train_step(model, opt, accum_steps=1)
+    s2 = make_train_step(model, opt, accum_steps=2)
+    from repro.train.loop import TrainState
+
+    params, _ = model.init(jax.random.PRNGKey(0))
+    st = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    out1, _ = s1(st, batch)
+    st2 = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    out2, _ = s2(st2, batch)
+    for a, b, p0 in zip(
+        jax.tree_util.tree_leaves(out1.params),
+        jax.tree_util.tree_leaves(out2.params),
+        jax.tree_util.tree_leaves(params),
+    ):
+        # compare the applied updates (param deltas)
+        np.testing.assert_allclose(
+            np.asarray(a - p0, np.float32), np.asarray(b - p0, np.float32),
+            rtol=1e-3, atol=1e-6,
+        )
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    model = _tiny_model()
+    trainer = Trainer(
+        model, adam(1e-3), ckpt_dir=str(tmp_path), ckpt_every=5
+    )
+    state = trainer.restore_or_init(jax.random.PRNGKey(0))
+    state, _ = trainer.run(state, _batches(model), num_steps=6, log_fn=lambda s: None)
+    # simulate failure: new trainer, restore
+    trainer2 = Trainer(
+        model, adam(1e-3), ckpt_dir=str(tmp_path), ckpt_every=5
+    )
+    state2 = trainer2.restore_or_init(jax.random.PRNGKey(99))
+    assert int(state2.step) == int(state.step)
+
+
+def test_straggler_watchdog_flags_slow_step():
+    wd = StragglerWatchdog(factor=3.0, warmup=3)
+    for _ in range(5):
+        assert wd.observe(0.1) is None
+    msg = wd.observe(1.0)
+    assert msg is not None and "straggler" in msg
