@@ -48,6 +48,10 @@ def main() -> None:
         from benchmarks import roofline
 
         roofline.run()
+    if "stream" in which:
+        from benchmarks import stream_bench
+
+        stream_bench.run()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,104 @@
+"""Event-driven vs dense SNN execution across spike rates.
+
+For each input spike rate r in [0, 1]:
+  - ops: accumulator adds the AER path *measured* (events x fan_out) vs the
+    dense path's fixed fan_in x fan_out x T — the paper's event-driven
+    claim, verified with counted events instead of an assumed rate;
+  - energy: both op counts priced with core.energy's Horowitz table;
+  - time: wall time of the dense ``core.snn.forward`` vs the event-driven
+    ``events.runtime.event_forward`` and the AER gather kernel vs the
+    dense spike_matmul kernel (interpret mode on CPU — the op/energy
+    scaling is the portable signal, kernel wall times are indicative only);
+  - throughput: events/sec of the event-driven forward.
+
+Usage:  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
+   or:  PYTHONPATH=src python -m benchmarks.run stream
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import energy, quant, snn
+from repro.events import runtime
+from repro.kernels import ops
+
+RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
+
+
+def run() -> None:
+    main([])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 4096-512-2 (slow on CPU)")
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    sizes = (4096, 512, 2) if args.full else (1024, 256, 2)
+    cfg = snn.SNNConfig(layer_sizes=sizes, num_steps=25)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    wq = quant.quantize(params["layer0"]["w"])  # for the kernel comparison
+    B, T, K = args.batch, cfg.num_steps, sizes[0]
+    rng = np.random.default_rng(0)
+
+    dense_fwd = jax.jit(lambda s: snn.forward(params, s, cfg, train=False))
+    event_fwd = jax.jit(lambda s: runtime.event_forward(params, s, cfg))
+    dense_ops = energy.snn_inference_ops(
+        sizes, T, [1.0] * cfg.num_layers, event_driven=False
+    )
+
+    print(f"# layer_sizes={sizes} T={T} B={B} (per-inference numbers)")
+    print("rate,meas_events_l0,aer_adds,dense_adds,add_ratio,"
+          "aer_energy_pj,dense_energy_pj,energy_ratio,"
+          "dense_fwd_us,event_fwd_us,events_per_sec,"
+          "spike_mm_us,aer_mm_us")
+    for rate in RATES:
+        spikes = (rng.random((T, B, K)) < rate).astype(np.float32)
+        spikes_j = jnp.asarray(spikes)
+
+        _, _, ev = event_fwd(spikes_j)
+        ev_mean = np.asarray(ev).mean(axis=1)  # per-inference events/layer
+        oc = energy.snn_ops_from_events(sizes, T, ev_mean)
+        aer_adds = oc.ops.get("add_i32", 0.0)
+        dense_adds = dense_ops.ops["add_i32"]
+
+        t_dense = time_fn(dense_fwd, spikes_j, warmup=1, iters=3)
+        t_event = time_fn(event_fwd, spikes_j, warmup=1, iters=3)
+        ev_total = float(np.asarray(ev).sum())
+        evps = ev_total / args.batch / (t_event * 1e-6) if t_event else 0.0
+
+        # kernel-level: one step's integration, dense vs AER event list
+        row = jnp.asarray(spikes[0, 0][None, :].astype(np.int8))
+        t_mm = time_fn(ops.spike_matmul, row, wq, warmup=1, iters=3)
+        idx = np.nonzero(spikes[0, 0])[0]
+        cap = max(int(K * max(rate, 0.01)) + 8, 8)
+        a = np.zeros(cap, np.int32)
+        v = np.zeros(cap, np.int32)
+        a[: len(idx[:cap])] = idx[:cap]
+        v[: len(idx[:cap])] = 1
+        t_aer = time_fn(
+            ops.aer_spike_matmul, jnp.asarray(a), jnp.asarray(v), wq,
+            warmup=1, iters=3,
+        )
+
+        print(
+            f"{rate:.2f},{ev_mean[0]:.0f},{aer_adds:.3g},{dense_adds:.3g},"
+            f"{aer_adds/dense_adds:.3f},"
+            f"{oc.energy_pj():.3g},{dense_ops.energy_pj():.3g},"
+            f"{oc.energy_pj()/dense_ops.energy_pj():.3f},"
+            f"{t_dense:.0f},{t_event:.0f},{evps:.0f},"
+            f"{t_mm:.0f},{t_aer:.0f}",
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Demo: streaming event-driven SNN serving.
+
+Builds a small collision-avoidance SNN, then serves a mixed workload
+through the streaming engine:
+
+  1. rate-coded camera frames (procedural collision scenes), and
+  2. synthetic DVS event-camera recordings (AER brightness-change events),
+
+with more requests than slots, so continuous batching and the persistent
+per-slot membrane state are both exercised.  Prints per-request latency,
+measured spike rate and measured energy — note how much cheaper the sparse
+DVS inputs are than dense-ish rate coding at identical network shape.
+
+Run:  PYTHONPATH=src python examples/event_stream_serving.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import snn
+from repro.data import collision
+from repro.events import aer
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+HW = 32
+N_RATE, N_DVS = 6, 6
+
+
+def main():
+    cfg = snn.SNNConfig(layer_sizes=(HW * HW, 128, 2), num_steps=25)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    engine = SNNStreamEngine(params, cfg, num_slots=4, chunk_steps=5)
+
+    # rate-coded procedural camera frames
+    data_cfg = collision.CollisionConfig(image_hw=HW, num_train=0,
+                                         num_test=N_RATE)
+    _, _, frames, labels = collision.generate(data_cfg)
+    reqs = [StreamRequest(image=f.reshape(-1)) for f in frames]
+
+    # synthetic DVS event streams, densified to the engine's input plane
+    stream, dvs_labels = aer.dvs_collision_batch(
+        jax.random.PRNGKey(1), N_DVS, image_hw=HW,
+        num_steps=cfg.num_steps, capacity=8 * HW * HW,
+    )
+    dense = aer.aer_to_dense(stream, cfg.num_steps, HW * HW)
+    reqs += [
+        StreamRequest(spikes=np.asarray(jnp.clip(dense[:, i], 0.0, 1.0)))
+        for i in range(N_DVS)
+    ]
+
+    results = engine.run(reqs)
+    kinds = ["rate"] * N_RATE + ["dvs"] * N_DVS
+    print("req kind  pred  latency   in-rate   events(l0,l1)   energy")
+    for r in results:
+        ev = ", ".join(f"{e:.0f}" for e in r.events_per_layer)
+        print(
+            f"{r.request_id:3d} {kinds[r.request_id]:5s} {r.prediction:3d} "
+            f"{r.latency_s*1e3:8.1f}ms  {r.spike_rate:7.3f}   "
+            f"[{ev:>12s}]  {r.energy_pj/1e3:8.1f} nJ"
+        )
+    for kind in ("rate", "dvs"):
+        sel = [r for r in results if kinds[r.request_id] == kind]
+        e = np.mean([r.energy_pj for r in sel])
+        rt = np.mean([r.spike_rate for r in sel])
+        print(f"{kind:5s}: mean input rate {rt:.3f}, "
+              f"mean measured energy {e/1e3:.1f} nJ/inference")
+    print(f"engine throughput: {engine.events_per_sec():.0f} events/s "
+          f"over {engine.total_steps} slot-steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -102,6 +102,41 @@ def snn_inference_ops(
     return c
 
 
+def snn_ops_from_events(
+    layer_sizes: Sequence[int],
+    num_steps: int,
+    events_per_layer: Sequence[float],
+    *,
+    weight_bits: int = 16,
+    neuron_kind: str = "lif",
+) -> OpCount:
+    """Event-driven SNN cost from **measured** event counts.
+
+    ``events_per_layer[i]`` = number of input events layer i actually
+    received over the whole inference window (counted by
+    ``events.runtime``), replacing the assumed ``rate * fan_in * T`` of
+    ``snn_inference_ops``.  Synaptic integration costs one accumulator add
+    (and one weight fetch) per event per output; the neuron update still
+    runs every step for every neuron (the LIF hardware unit is clocked,
+    not event-gated).
+    """
+    c = OpCount()
+    acc_add = "add_i32"
+    wpl = 64 // weight_bits
+    for i, (fan_in, fan_out) in enumerate(zip(layer_sizes[:-1], layer_sizes[1:])):
+        ev = float(events_per_layer[i])
+        c.add(acc_add, ev * fan_out)
+        c.add(acc_add, num_steps * fan_out)  # bias add
+        if neuron_kind == "lif":
+            c.add("mul_i16", num_steps * fan_out)  # beta * U
+        c.add("add_i16", num_steps * fan_out)
+        c.add("cmp_i16", num_steps * fan_out)
+        c.add("sram_64b", ev * fan_out / wpl)
+    # AER input events arrive as ~32-bit (time, address) words, 2 per line
+    c.add("sram_64b", float(events_per_layer[0]) / 2)
+    return c
+
+
 def bcnn_inference_ops(
     conv_shapes: Sequence[tuple],
     fc_shapes: Sequence[tuple],

@@ -24,6 +24,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax moved shard_map out of experimental and renamed check_rep->check_vma;
+# support both spellings so the pipeline runs on every container toolchain.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = {"check_vma": False}
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = {"check_rep": False}
+
 PyTree = Any
 
 
@@ -42,11 +52,11 @@ def pipeline_forward(
     S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
 
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axis), P(None)),
         out_specs=P(None),
-        check_vma=False,
+        **_CHECK_KW,
     )
     def pipe_fn(stage_params, microbatches):
         # stage_params leaves arrive as (1, ...) local slices

@@ -1,0 +1,17 @@
+"""Event-driven Address-Event Representation (AER) subsystem.
+
+The paper's energy win comes from touching only *active* synapses; this
+package makes that dataflow real instead of analytic:
+
+- ``aer``:     fixed-capacity AER event tensors, dense<->AER converters,
+               stream merging, and a synthetic DVS event-camera generator
+               for the collision-avoidance scenario.
+- ``runtime``: event-driven SNN forward (gathers only active weight rows)
+               that matches ``core.snn.forward`` to float tolerance and
+               reports *measured* per-layer event counts for the energy
+               model.
+"""
+
+from repro.events import aer, runtime
+
+__all__ = ["aer", "runtime"]

@@ -1,0 +1,231 @@
+"""Address-Event Representation (AER) spike tensors.
+
+Neuromorphic hardware (and the paper's event-driven FPGA datapath) does not
+move dense activation planes around — it moves *events*: (time, address)
+pairs emitted only when a neuron/pixel actually fires.  This module gives
+the repo a jit-able AER format:
+
+- ``EventStream``: fixed-capacity event tensors ``(times, addrs, polarity,
+  count)``.  Fixed capacity keeps every shape static so streams compose
+  with jit/vmap/scan; ``count`` marks how many leading events are valid.
+- ``dense_to_aer`` / ``aer_to_dense``: lossless round-trip whenever the
+  capacity covers the number of active entries; on overflow the *earliest*
+  events (time-major order) are kept and the tail is truncated.
+- ``merge``: time-ordered merge of two streams over one address space.
+- ``dvs_collision_stream``: a synthetic DVS event camera for the paper's
+  collision-avoidance scenario — an obstacle approaching (collision) or
+  passing laterally (no collision) rendered as brightness-change events.
+
+Padding convention (canonical, relied on by ``events.runtime``):
+invalid slots have ``times == num_steps_used_at_encode`` (i.e. strictly
+after every valid event), ``addrs == 0`` and ``polarity == 0``, and valid
+events are sorted by (time, address-scan order) ascending.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import coding
+
+Array = jax.Array
+
+
+class EventStream(NamedTuple):
+    """Fixed-capacity AER event tensor with optional leading batch dims.
+
+    times:    (..., E) int32 — time step of each event
+    addrs:    (..., E) int32 — flattened neuron / pixel address
+    polarity: (..., E) int8  — +1 / -1 event sign (0 on padding)
+    count:    (...,)   int32 — number of valid leading events (<= E)
+    """
+
+    times: Array
+    addrs: Array
+    polarity: Array
+    count: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.times.shape[-1]
+
+    @property
+    def batch_shape(self) -> Tuple[int, ...]:
+        return self.times.shape[:-1]
+
+
+def dense_to_aer(spikes: Array, capacity: int) -> EventStream:
+    """Convert a dense spike train (T, ..., N) into an AER stream.
+
+    Events are ordered time-major (all step-0 events before step-1, in
+    address order within a step).  If more than ``capacity`` entries are
+    active, the earliest ``capacity`` events are kept — a real AER bus
+    back-pressures exactly this way (later events are the ones dropped).
+    """
+    T, N = spikes.shape[0], spikes.shape[-1]
+    batch_shape = spikes.shape[1:-1]
+    # (batch..., T*N), time-major flattening
+    x = jnp.moveaxis(spikes, 0, -2).reshape(batch_shape + (T * N,))
+    active = x != 0
+    # stable sort: active entries first, original (time-major) order kept
+    order = jnp.argsort(~active, axis=-1, stable=True)
+    flat_idx = order[..., :capacity]
+    n_active = jnp.sum(active, axis=-1).astype(jnp.int32)
+    count = jnp.minimum(n_active, capacity)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < count[..., None]
+    times = jnp.where(valid, flat_idx // N, T).astype(jnp.int32)
+    addrs = jnp.where(valid, flat_idx % N, 0).astype(jnp.int32)
+    pol = jnp.take_along_axis(x, flat_idx, axis=-1)
+    polarity = jnp.where(valid, jnp.sign(pol), 0).astype(jnp.int8)
+    return EventStream(times=times, addrs=addrs, polarity=polarity, count=count)
+
+
+def aer_to_dense(stream: EventStream, num_steps: int, num_addrs: int) -> Array:
+    """Scatter an AER stream back to a dense (T, ..., N) float32 train."""
+    E = stream.capacity
+    batch_shape = stream.batch_shape
+    nb = 1
+    for d in batch_shape:
+        nb *= d
+    times = stream.times.reshape(nb, E)
+    addrs = stream.addrs.reshape(nb, E)
+    pol = stream.polarity.reshape(nb, E)
+    count = stream.count.reshape(nb)
+
+    def row(t, a, p, c):
+        valid = jnp.arange(E, dtype=jnp.int32) < c
+        # out-of-range index on padding -> dropped by the scatter
+        idx = jnp.where(valid, t * num_addrs + a, num_steps * num_addrs)
+        flat = jnp.zeros((num_steps * num_addrs,), jnp.float32)
+        return flat.at[idx].add(p.astype(jnp.float32), mode="drop")
+
+    dense = jax.vmap(row)(times, addrs, pol, count)
+    dense = dense.reshape(batch_shape + (num_steps, num_addrs))
+    return jnp.moveaxis(dense, -2, 0)
+
+
+def merge(
+    a: EventStream,
+    b: EventStream,
+    *,
+    num_addrs: int,
+    capacity: int,
+    num_steps: Optional[int] = None,
+) -> EventStream:
+    """Time-ordered merge of two streams over the same address space.
+
+    Keeps the earliest ``capacity`` events of the union (AER bus arbiter
+    semantics); ``capacity`` may exceed the combined input capacity to
+    leave headroom for later merges.  Both inputs must follow the
+    canonical padding convention.  Pass ``num_steps`` (the T both streams
+    were encoded with) to stamp padding slots canonically; without it the
+    pad time falls back to one past the latest observed time, which still
+    sorts strictly after every valid event.
+    """
+    times = jnp.concatenate([a.times, b.times], axis=-1)
+    addrs = jnp.concatenate([a.addrs, b.addrs], axis=-1)
+    pol = jnp.concatenate([a.polarity, b.polarity], axis=-1)
+    # padding (times == T_pad, addrs == 0) sorts after every valid event
+    key = times * num_addrs + addrs
+    take = min(capacity, times.shape[-1])
+    order = jnp.argsort(key, axis=-1, stable=True)[..., :take]
+    count = jnp.minimum(a.count + b.count, capacity)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < count[..., None]
+    out_t = jnp.take_along_axis(times, order, axis=-1)
+    out_a = jnp.take_along_axis(addrs, order, axis=-1)
+    out_p = jnp.take_along_axis(pol, order, axis=-1)
+    if capacity > take:
+        pad = ((0, 0),) * (out_t.ndim - 1) + ((0, capacity - take),)
+        out_t, out_a, out_p = (jnp.pad(x, pad) for x in (out_t, out_a, out_p))
+    if num_steps is not None:
+        pad_t = jnp.full(times.shape[:-1] + (1,), num_steps, jnp.int32)
+    else:
+        pad_t = jnp.max(times, axis=-1, keepdims=True) + 1
+    return EventStream(
+        times=jnp.where(valid, out_t, pad_t).astype(jnp.int32),
+        addrs=jnp.where(valid, out_a, 0).astype(jnp.int32),
+        polarity=jnp.where(valid, out_p, 0).astype(jnp.int8),
+        count=count.astype(jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Synthetic DVS event camera for the collision-avoidance scenario
+# --------------------------------------------------------------------------
+
+
+def _render_frames(
+    key: jax.Array, image_hw: int, num_steps: int, label: Array
+) -> Array:
+    """(T, hw, hw) grayscale frames: obstacle approaching (label 1) or
+    passing laterally far from center (label 0)."""
+    hw, T = image_hw, num_steps
+    k1, k2, k3 = jax.random.split(key, 3)
+    yy, xx = jnp.mgrid[0:hw, 0:hw]
+    t = jnp.arange(T, dtype=jnp.float32)[:, None, None]
+    bg = 0.35 + 0.4 * (yy / hw)  # graded ground plane
+
+    cy = hw * jax.random.uniform(k1, minval=0.5, maxval=0.7)
+    # collision: centered obstacle growing as it approaches
+    cx_c = hw * (0.5 + 0.2 * (jax.random.uniform(k2) - 0.5))
+    size_c = hw * (0.06 + 0.30 * t / T)
+    # no collision: small obstacle translating across the periphery
+    x0 = hw * jax.random.uniform(k3, minval=0.05, maxval=0.25)
+    cx_n = x0 + (hw * 0.6) * t / T
+    size_n = jnp.full_like(t, hw * 0.05)
+
+    cx = jnp.where(label == 1, cx_c, cx_n)
+    size = jnp.where(label == 1, size_c, size_n)
+    obstacle = (jnp.abs(xx[None] - cx) < size) & (
+        jnp.abs(yy[None] - cy) < size * 1.2
+    )
+    return jnp.where(obstacle, 0.08, bg[None]).astype(jnp.float32)
+
+
+def dvs_collision_stream(
+    key: jax.Array,
+    *,
+    image_hw: int = 64,
+    num_steps: int = 25,
+    capacity: int = 2048,
+    delta_threshold: float = 0.1,
+) -> Tuple[EventStream, Array]:
+    """One synthetic DVS recording: brightness-change events of a moving
+    obstacle, plus its collision / no-collision label.
+
+    Returns (stream over ``image_hw**2`` pixel addresses, scalar label).
+    Frame 0 is emitted in full (every DVS dump starts with the reference
+    frame's delta against black), then only changes spike — the event count
+    therefore *measures* scene motion, which is what makes the
+    event-driven path cheap on mostly-static scenes.
+    """
+    k_label, k_scene = jax.random.split(key)
+    label = jax.random.bernoulli(k_label, 0.5).astype(jnp.int32)
+    frames = _render_frames(k_scene, image_hw, num_steps, label)
+    flat = frames.reshape(num_steps, image_hw * image_hw)
+    spikes = coding.delta_encode(flat, threshold=delta_threshold)
+    return dense_to_aer(spikes, capacity), label
+
+
+def dvs_collision_batch(
+    key: jax.Array,
+    batch: int,
+    *,
+    image_hw: int = 64,
+    num_steps: int = 25,
+    capacity: int = 2048,
+    delta_threshold: float = 0.1,
+) -> Tuple[EventStream, Array]:
+    """vmap'd batch of DVS recordings: stream with (B,) batch dim, (B,) labels."""
+    keys = jax.random.split(key, batch)
+    fn = lambda k: dvs_collision_stream(
+        k,
+        image_hw=image_hw,
+        num_steps=num_steps,
+        capacity=capacity,
+        delta_threshold=delta_threshold,
+    )
+    return jax.vmap(fn)(keys)

@@ -1,0 +1,15 @@
+"""Small jax-version shims shared by the Pallas kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; support
+both so the kernels import under every toolchain the container ships.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.kernels import aer_matmul as _aer
 from repro.kernels import lif_fused as _lif
 from repro.kernels import q115_matmul as _q115
 from repro.kernels import spike_matmul as _smm
@@ -51,6 +52,17 @@ def lif_fused(
 
 def spike_matmul(spikes: Array, weights_q: Array) -> Array:
     return _smm.spike_matmul(spikes, weights_q, interpret=not on_tpu())
+
+
+def aer_spike_matmul(addrs: Array, values: Array, weights_q: Array) -> Array:
+    """Event-driven synaptic integration over an AER event list.
+
+    out[n] = sum_e values[e] * weights_q[addrs[e], n]  (int32 accumulator,
+    the 28-bit-class adder-tree intermediate).  Work scales with the event
+    count, not fan-in — the hardware-faithful path for sparse spike trains.
+    """
+    return _aer.aer_spike_matmul(addrs, values, weights_q,
+                                 interpret=not on_tpu())
 
 
 def q115_matmul(x_q: Array, w_q: Array, *, saturate: bool = True) -> Array:

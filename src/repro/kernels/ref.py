@@ -75,6 +75,23 @@ def spike_matmul_ref(
     )
 
 
+def aer_spike_matmul_ref(
+    addrs: Array,  # (E,) int32 event addresses in [0, K)
+    values: Array,  # (E,) int-like signed event values (0 = padding)
+    weights_q: Array,  # (K, N) int16 Q1.15 codes
+) -> Array:
+    """AER event-driven integration: gather only the weight rows of active
+    input addresses and accumulate them, weighted by event polarity.
+
+    Exact integer contract: out[n] = sum_e values[e] * wq[addrs[e], n],
+    int32.  With ``values`` = the {0,1} validity mask of an event list
+    built from a dense spike row, this equals ``spike_matmul_ref`` on that
+    row — property-tested in tests/test_events.py.
+    """
+    rows = jnp.take(weights_q, addrs, axis=0).astype(jnp.int32)  # (E, N)
+    return jnp.sum(rows * values.astype(jnp.int32)[:, None], axis=0)
+
+
 def q115_matmul_ref(x_q: Array, w_q: Array) -> Array:
     """Q1.15 fixed-point matmul: int16 x int16 -> int32 accum -> round-to-
     nearest shift >>15 -> saturate int16.  Bit-exact contract."""

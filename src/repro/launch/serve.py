@@ -1,7 +1,12 @@
-"""Serving launcher: batched generation for any arch (reduced on CPU).
+"""Serving launcher: batched LM generation or streaming SNN inference.
 
+LM zoo (token decode, continuous batching over prompts):
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
       --reduced --requests 8 --new-tokens 16 [--quant q115]
+
+SNN streaming (event-driven, persistent membrane state, measured energy):
+  PYTHONPATH=src python -m repro.launch.serve --snn --requests 16 \
+      --batch 4 --chunk-steps 5 --image-hw 32 [--dvs]
 """
 
 from __future__ import annotations
@@ -18,19 +23,7 @@ from repro.models.model import Model
 from repro.serving.engine import Request, ServeEngine
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b",
-                    choices=configs.ARCH_IDS)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--cache-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--quant", default=None, choices=[None, "q115"])
-    args = ap.parse_args(argv)
-
+def _serve_lm(args) -> None:
     cfg = configs.get(args.arch).reduced()
     if args.quant:
         cfg = dataclasses.replace(cfg, quant=args.quant)
@@ -58,6 +51,100 @@ def main(argv=None):
     n = sum(len(o) for o in outs)
     print(f"{args.arch}: served {len(reqs)} reqs / {n} tokens in {dt:.2f}s "
           f"({n/dt:.1f} tok/s on CPU, quant={cfg.quant})")
+
+
+def _serve_snn(args) -> None:
+    import jax.numpy as jnp
+
+    from repro.core import snn
+    from repro.events import aer
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    if args.requests <= 0:
+        print("snn: nothing to serve (--requests 0)")
+        return
+    hw = args.image_hw
+    cfg = snn.SNNConfig(
+        layer_sizes=(hw * hw, args.hidden, 2), num_steps=args.num_steps
+    )
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    engine = SNNStreamEngine(
+        params, cfg, num_slots=args.batch, chunk_steps=args.chunk_steps,
+        seed=1,
+    )
+
+    key = jax.random.PRNGKey(2)
+    reqs = []
+    if args.dvs:
+        # DVS event-camera input: densify each synthetic recording into the
+        # engine's (T, K) plane ({0,1}: ON events drive the SNN)
+        stream, labels = aer.dvs_collision_batch(
+            key, args.requests, image_hw=hw, num_steps=cfg.num_steps,
+            capacity=8 * hw * hw,
+        )
+        dense = aer.aer_to_dense(stream, cfg.num_steps, hw * hw)
+        for i in range(args.requests):
+            spikes = np.asarray(jnp.clip(dense[:, i], 0.0, 1.0))
+            reqs.append(StreamRequest(spikes=spikes))
+    else:
+        from repro.data import collision
+
+        data_cfg = collision.CollisionConfig(
+            image_hw=hw, num_train=0, num_test=args.requests
+        )
+        _, _, test_x, _ = collision.generate(data_cfg)
+        for x in test_x:
+            reqs.append(StreamRequest(image=x.reshape(-1)))
+
+    t0 = time.time()
+    results = engine.run(reqs)
+    dt = time.time() - t0
+    lat = np.array([r.latency_s for r in results])
+    energy = np.array([r.energy_pj for r in results])
+    rate = np.array([r.spike_rate for r in results])
+    src = "dvs-events" if args.dvs else "rate-coded"
+    print(
+        f"snn[{hw}x{hw}->{args.hidden}->2, T={cfg.num_steps}, {src}]: "
+        f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots"
+    )
+    print(
+        f"  latency p50/p95: {np.percentile(lat, 50)*1e3:.1f}/"
+        f"{np.percentile(lat, 95)*1e3:.1f} ms | "
+        f"throughput: {engine.events_per_sec():.0f} events/s | "
+        f"input rate: {rate.mean():.3f}"
+    )
+    print(
+        f"  measured energy/inference: {energy.mean()/1e3:.1f} nJ "
+        f"(model estimate from counted events)"
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b",
+                    choices=configs.ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quant", default=None, choices=[None, "q115"])
+    # streaming SNN mode
+    ap.add_argument("--snn", action="store_true",
+                    help="serve the event-driven SNN instead of an LM")
+    ap.add_argument("--dvs", action="store_true",
+                    help="synthetic DVS event-camera input (with --snn)")
+    ap.add_argument("--image-hw", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--num-steps", type=int, default=25)
+    ap.add_argument("--chunk-steps", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    if args.snn:
+        _serve_snn(args)
+    else:
+        _serve_lm(args)
 
 
 if __name__ == "__main__":

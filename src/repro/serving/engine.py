@@ -42,11 +42,27 @@ class ServeEngine:
             lambda p, b: model.prefill(p, b, cache_len)
         )
 
-    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
+    def _sample(
+        self, logits: jax.Array, temps: jax.Array, any_sampling: bool
+    ) -> jax.Array:
+        """Per-request sampling: row i uses requests[i]'s temperature.
+
+        ``logits`` is (B, V) or (B, K, V) (codebook heads); ``temps`` is
+        (B,).  Rows with temperature <= 0 decode greedily, others sample
+        from their own temperature-scaled distribution.  ``any_sampling``
+        is hoisted by the caller so the all-greedy fast path costs no
+        device sync per token.
+        """
+        greedy = jnp.argmax(logits, axis=-1)
+        if not any_sampling:
+            return greedy
         self._rng, k = jax.random.split(self._rng)
-        return jax.random.categorical(k, logits / temperature, axis=-1)
+        t = temps.reshape((-1,) + (1,) * (logits.ndim - 1))
+        sampled = jax.random.categorical(
+            k, logits / jnp.maximum(t, 1e-6), axis=-1
+        )
+        cond = (temps > 0.0).reshape((-1,) + (1,) * (greedy.ndim - 1))
+        return jnp.where(cond, sampled, greedy)
 
     def generate(self, requests: List[Request]) -> List[np.ndarray]:
         """Batched generation; requests are chunked into engine batches."""
@@ -67,8 +83,10 @@ class ServeEngine:
         # resample from their true last position during the first steps.
         steps = max(r.max_new_tokens for r in reqs)
         pos = jnp.asarray([Lmax for _ in reqs], jnp.int32)
+        temps = jnp.asarray([r.temperature for r in reqs], jnp.float32)
+        any_sampling = any(r.temperature > 0.0 for r in reqs)
         out_tokens = [[] for _ in range(B)]
-        tok = self._sample(logits, reqs[0].temperature)
+        tok = self._sample(logits, temps, any_sampling)
         for r_i in range(B):
             out_tokens[r_i].append(np.asarray(tok[r_i]))
         for t in range(steps - 1):
@@ -76,7 +94,7 @@ class ServeEngine:
             logits, cache = self._decode(
                 self.params, step_tok.astype(jnp.int32), pos, cache
             )
-            tok = self._sample(logits, reqs[0].temperature)
+            tok = self._sample(logits, temps, any_sampling)
             pos = pos + 1
             for r_i in range(B):
                 out_tokens[r_i].append(np.asarray(tok[r_i]))

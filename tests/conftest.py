@@ -3,3 +3,5 @@ import sys
 
 # make `import repro` work without PYTHONPATH=src
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# make `import _hypothesis_compat` work regardless of pytest rootdir mode
+sys.path.insert(0, os.path.dirname(__file__))

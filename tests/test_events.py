@@ -1,0 +1,255 @@
+"""AER event subsystem: format round-trips, kernel contract, and
+event-driven forward parity with the dense reference (incl. the paper's
+collision config) + measured-op scaling with spike rate."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core import coding, energy, quant, snn
+from repro.events import aer, runtime
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _rand_spikes(T, B, N, rate, signed=False):
+    s = (RNG.random((T, B, N)) < rate).astype(np.float32)
+    if signed:
+        s *= RNG.choice([-1.0, 1.0], (T, B, N))
+    return jnp.asarray(s)
+
+
+# ------------------------------------------------------------------ format
+@pytest.mark.parametrize("rate", [0.0, 0.1, 0.5, 1.0])
+def test_dense_aer_roundtrip_identity(rate):
+    T, B, N = 7, 3, 40
+    spikes = _rand_spikes(T, B, N, rate)
+    stream = aer.dense_to_aer(spikes, capacity=T * N)
+    assert int(stream.count.sum()) == int(spikes.sum())
+    back = aer.aer_to_dense(stream, T, N)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(spikes))
+
+
+def test_roundtrip_signed_polarity():
+    T, N = 9, 33
+    spikes = _rand_spikes(T, 2, N, 0.3, signed=True)
+    stream = aer.dense_to_aer(spikes, capacity=T * N)
+    back = aer.aer_to_dense(stream, T, N)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(spikes))
+
+
+def test_overflow_keeps_earliest_events():
+    """At capacity the stream truncates the *latest* events: the decoded
+    train is exactly the time-major prefix of the original."""
+    T, N, cap = 6, 25, 17
+    spikes = np.asarray(_rand_spikes(T, 1, N, 0.5))[:, 0]  # (T, N)
+    stream = aer.dense_to_aer(jnp.asarray(spikes[:, None]), capacity=cap)
+    assert int(stream.count[0]) == cap < spikes.sum()
+    back = np.asarray(aer.aer_to_dense(stream, T, N))[:, 0]
+    flat = spikes.reshape(-1).copy()
+    keep = np.cumsum(flat != 0) <= cap  # first cap active entries
+    expected = (flat * keep).reshape(T, N)
+    np.testing.assert_array_equal(back, expected)
+
+
+def test_padding_convention():
+    T, N = 5, 10
+    spikes = _rand_spikes(T, 1, N, 0.2)
+    stream = aer.dense_to_aer(spikes, capacity=T * N)
+    c = int(stream.count[0])
+    assert np.all(np.asarray(stream.times[0, c:]) == T)
+    assert np.all(np.asarray(stream.addrs[0, c:]) == 0)
+    assert np.all(np.asarray(stream.polarity[0, c:]) == 0)
+    # valid events time-sorted ascending
+    assert np.all(np.diff(np.asarray(stream.times[0, :c])) >= 0)
+
+
+def test_merge_streams():
+    T, N = 8, 30
+    a_dense = _rand_spikes(T, 2, N, 0.15)
+    b_dense = _rand_spikes(T, 2, N, 0.15)
+    # disjoint support so the merged dense train is just the sum
+    b_dense = b_dense * (a_dense == 0)
+    sa = aer.dense_to_aer(a_dense, capacity=T * N)
+    sb = aer.dense_to_aer(b_dense, capacity=T * N)
+    merged = aer.merge(sa, sb, num_addrs=N, capacity=2 * T * N)
+    back = aer.aer_to_dense(merged, T, N)
+    np.testing.assert_array_equal(
+        np.asarray(back), np.asarray(a_dense + b_dense)
+    )
+    c = int(merged.count[0])
+    assert np.all(np.diff(np.asarray(merged.times[0, :c])) >= 0)
+
+
+def test_merge_with_capacity_headroom():
+    """Output capacity beyond the combined inputs (headroom for further
+    merges) must pad, not crash, and keep the padding convention."""
+    T, N = 4, 8
+    a_dense = _rand_spikes(T, 1, N, 0.9)  # nearly-full streams
+    b_dense = _rand_spikes(T, 1, N, 0.9) * (a_dense == 0)
+    sa = aer.dense_to_aer(a_dense, capacity=int(a_dense.sum()))
+    sb = aer.dense_to_aer(b_dense, capacity=max(int(b_dense.sum()), 1))
+    cap = 3 * T * N  # > Ea + Eb
+    merged = aer.merge(sa, sb, num_addrs=N, capacity=cap, num_steps=T)
+    assert merged.capacity == cap
+    c = int(merged.count[0])
+    assert np.all(np.asarray(merged.times[0, c:]) == T)
+    assert np.all(np.asarray(merged.polarity[0, c:]) == 0)
+    back = aer.aer_to_dense(merged, T, N)
+    np.testing.assert_array_equal(
+        np.asarray(back), np.asarray(a_dense + b_dense)
+    )
+
+
+def test_dvs_generator_wellformed():
+    T, hw, cap = 12, 16, 1024
+    stream, labels = aer.dvs_collision_batch(
+        jax.random.PRNGKey(3), 4, image_hw=hw, num_steps=T, capacity=cap
+    )
+    assert stream.times.shape == (4, cap)
+    assert set(np.asarray(labels).tolist()) <= {0, 1}
+    counts = np.asarray(stream.count)
+    assert np.all(counts > 0) and np.all(counts <= cap)
+    for i in range(4):
+        c = counts[i]
+        t = np.asarray(stream.times[i])
+        a = np.asarray(stream.addrs[i])
+        assert np.all(np.diff(t[:c]) >= 0)
+        assert np.all((a[:c] >= 0) & (a[:c] < hw * hw))
+        assert np.all(t[c:] == T)
+
+
+# ------------------------------------------------------------------ kernel
+@pytest.mark.parametrize("rate", [0.0, 0.05, 0.25, 0.5, 0.75, 1.0])
+@pytest.mark.parametrize("K,N", [(64, 32), (300, 70), (257, 129)])
+def test_aer_kernel_matches_ref_and_dense(rate, K, N):
+    """aer_spike_matmul == oracle == dense spike_matmul on the same row,
+    across the whole spike-rate range (bit-exact integer contract)."""
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16))
+    row = (RNG.random(K) < rate).astype(np.int8)
+    idx = np.nonzero(row)[0]
+    E = K + 5  # capacity with padding tail
+    addrs = np.zeros(E, np.int32)
+    values = np.zeros(E, np.int32)
+    addrs[: len(idx)] = idx
+    values[: len(idx)] = 1
+    out_k = ops.aer_spike_matmul(jnp.asarray(addrs), jnp.asarray(values), wq)
+    out_r = ref.aer_spike_matmul_ref(
+        jnp.asarray(addrs), jnp.asarray(values), wq
+    )
+    dense = ops.spike_matmul(jnp.asarray(row)[None, :], wq)[0]
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(dense))
+
+
+def test_aer_kernel_polarity():
+    K, N = 50, 20
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16))
+    addrs = jnp.asarray([3, 3, 10, 0], jnp.int32)
+    values = jnp.asarray([1, -1, 1, 0], jnp.int32)  # cancel + pad
+    out = ops.aer_spike_matmul(addrs, values, wq)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray(wq[10].astype(np.int32))
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 80),
+    n=st.integers(1, 40),
+    e=st.integers(1, 100),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aer_kernel_property(k, n, e, seed):
+    rng = np.random.default_rng(seed)
+    wq = jnp.asarray(rng.integers(-(2**15), 2**15, (k, n)).astype(np.int16))
+    addrs = jnp.asarray(rng.integers(0, k, e).astype(np.int32))
+    values = jnp.asarray(rng.integers(-1, 2, e).astype(np.int32))
+    out_k = ops.aer_spike_matmul(addrs, values, wq)
+    out_r = ref.aer_spike_matmul_ref(addrs, values, wq)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ----------------------------------------------------------------- runtime
+@pytest.mark.parametrize("rate", [0.0, 0.1, 0.5, 1.0])
+def test_event_forward_matches_dense(rate):
+    cfg = snn.SNNConfig(layer_sizes=(128, 32, 2), num_steps=12)
+    params = snn.init_params(jax.random.PRNGKey(1), cfg)
+    spikes = _rand_spikes(cfg.num_steps, 3, 128, rate)
+    dm, ds = snn.forward(params, spikes, cfg, train=False)
+    em, es, ev = runtime.event_forward(params, spikes, cfg)
+    np.testing.assert_allclose(
+        np.asarray(em), np.asarray(dm), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(es), np.asarray(ds))
+    # measured layer-0 events == nnz of the input train, per batch row
+    np.testing.assert_array_equal(
+        np.asarray(ev[0]), np.asarray(spikes.sum(axis=(0, 2)))
+    )
+
+
+def test_event_forward_matches_dense_collision_config():
+    """Acceptance: event-driven forward == core/snn.forward on the paper's
+    4096-512-2 collision architecture under rate coding."""
+    from repro.configs.collision_snn import CONFIG as cfg
+
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (2, 4096)) * 0.4
+    spikes = coding.rate_encode(jax.random.PRNGKey(2), imgs, cfg.num_steps)
+    dm, ds = snn.forward(params, spikes, cfg, train=False)
+    em, es, ev = runtime.event_forward(params, spikes, cfg)
+    np.testing.assert_allclose(
+        np.asarray(em), np.asarray(dm), atol=1e-4, rtol=1e-4
+    )
+    np.testing.assert_array_equal(np.asarray(es), np.asarray(ds))
+
+
+def test_event_forward_quantized_matches_dense():
+    cfg = snn.SNNConfig(layer_sizes=(64, 16, 2), num_steps=8, quant_q115=True)
+    params = snn.init_params(jax.random.PRNGKey(4), cfg)
+    spikes = _rand_spikes(cfg.num_steps, 2, 64, 0.3)
+    dm, _ = snn.forward(params, spikes, cfg, train=False)
+    em, _, _ = runtime.event_forward(params, spikes, cfg)
+    np.testing.assert_allclose(
+        np.asarray(em), np.asarray(dm), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_event_forward_aer_matches_event_forward():
+    cfg = snn.SNNConfig(layer_sizes=(100, 24, 2), num_steps=10)
+    params = snn.init_params(jax.random.PRNGKey(2), cfg)
+    spikes = _rand_spikes(cfg.num_steps, 3, 100, 0.2)
+    stream = aer.dense_to_aer(spikes, capacity=cfg.num_steps * 100)
+    em, es, eev = runtime.event_forward(params, spikes, cfg)
+    am, asp, aev = runtime.event_forward_aer(params, stream, cfg)
+    np.testing.assert_allclose(
+        np.asarray(am), np.asarray(em), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(asp), np.asarray(es))
+    np.testing.assert_allclose(np.asarray(aev), np.asarray(eev))
+
+
+def test_measured_ops_scale_with_rate():
+    """Acceptance: the AER path's op count scales with spike rate — fewer
+    accumulator adds than dense at rate < 1.0 (via core.energy.OpCount)."""
+    cfg = snn.SNNConfig(layer_sizes=(256, 64, 2), num_steps=15)
+    params = snn.init_params(jax.random.PRNGKey(3), cfg)
+    dense_oc = energy.snn_inference_ops(
+        cfg.layer_sizes, cfg.num_steps, [1.0, 1.0], event_driven=False
+    )
+    prev_adds = -1.0
+    for rate in (0.05, 0.3, 0.9):
+        spikes = _rand_spikes(cfg.num_steps, 1, 256, rate)
+        _, _, ev = runtime.event_forward(params, spikes, cfg)
+        oc = energy.snn_ops_from_events(
+            cfg.layer_sizes, cfg.num_steps, np.asarray(ev)[:, 0]
+        )
+        adds = oc.ops["add_i32"]
+        assert adds < dense_oc.ops["add_i32"]
+        assert adds > prev_adds  # monotone in measured activity
+        assert oc.energy_pj() < dense_oc.energy_pj()
+        prev_adds = adds

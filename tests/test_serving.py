@@ -42,6 +42,24 @@ def test_greedy_is_deterministic():
     np.testing.assert_array_equal(r1[0], r2[0])
 
 
+def test_per_request_temperature():
+    """A greedy (T=0) request must stay greedy even when batched with a
+    hot-temperature request (regression: the engine used to apply
+    reqs[0].temperature to every row)."""
+    eng = _engine(B=2)
+    rng = np.random.default_rng(3)
+    p_greedy = rng.integers(0, 128, 8).astype(np.int32)
+    p_hot = rng.integers(0, 128, 8).astype(np.int32)
+    solo = eng.generate([Request(prompt=p_greedy, max_new_tokens=6)])[0]
+    # greedy request in slot 1, hot request in slot 0 -> old code would
+    # sample slot 1 at temperature 5.0
+    mixed = eng.generate(
+        [Request(prompt=p_hot, max_new_tokens=6, temperature=5.0),
+         Request(prompt=p_greedy, max_new_tokens=6)]
+    )[1]
+    np.testing.assert_array_equal(solo, mixed)
+
+
 def test_batch_slots_do_not_interfere():
     """Same-length prompts: a request's greedy output is identical whether
     served alone or alongside different requests."""

@@ -1,0 +1,128 @@
+"""Streaming SNN serving engine: correctness of the scheduler (state
+persistence across chunks, continuous batching, slot isolation) and of the
+measured per-request energy accounting."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.events import runtime
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=20)
+
+
+def _params(seed=0):
+    return snn.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _train(rate, seed, T=None):
+    rng = np.random.default_rng(seed)
+    T = T or CFG.num_steps
+    return (rng.random((T, CFG.layer_sizes[0])) < rate).astype(np.float32)
+
+
+def test_engine_matches_direct_event_forward():
+    """One slot, one chunk covering the whole window == plain forward."""
+    params = _params()
+    train = _train(0.3, 0)
+    eng = SNNStreamEngine(params, CFG, num_slots=1,
+                          chunk_steps=CFG.num_steps)
+    res = eng.run([StreamRequest(spikes=train)])[0]
+    _, out_spikes, ev = runtime.event_forward(
+        params, jnp.asarray(train)[:, None, :], CFG
+    )
+    np.testing.assert_allclose(
+        res.spike_counts, np.asarray(out_spikes.sum(0))[0]
+    )
+    np.testing.assert_allclose(res.events_per_layer, np.asarray(ev)[:, 0])
+    assert res.steps == CFG.num_steps
+    assert res.latency_s > 0
+
+
+def test_chunking_is_invisible():
+    """Splitting the window into chunks (incl. a ragged final chunk) must
+    not change results — membrane state persists across chunks."""
+    params = _params()
+    trains = [_train(0.25, s) for s in range(3)]
+    ref_eng = SNNStreamEngine(params, CFG, num_slots=3,
+                              chunk_steps=CFG.num_steps)
+    ref_res = ref_eng.run([StreamRequest(spikes=t) for t in trains])
+    # 7 does not divide 20: the last chunk is ragged
+    chunked = SNNStreamEngine(params, CFG, num_slots=3, chunk_steps=7)
+    chk_res = chunked.run([StreamRequest(spikes=t) for t in trains])
+    for a, b in zip(ref_res, chk_res):
+        np.testing.assert_allclose(a.spike_counts, b.spike_counts)
+        np.testing.assert_allclose(a.events_per_layer, b.events_per_layer)
+        assert a.prediction == b.prediction
+
+
+def test_continuous_batching_refills_slots():
+    params = _params()
+    n_req = 7
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=6)
+    reqs = [StreamRequest(spikes=_train(0.2, s)) for s in range(n_req)]
+    results = eng.run(reqs)
+    assert [r.request_id for r in results] == list(range(n_req))
+    assert all(r.steps == CFG.num_steps for r in results)
+    # every request's layer-0 events == nnz of its own train
+    for s, r in enumerate(results):
+        assert r.events_per_layer[0] == _train(0.2, s).sum()
+
+
+def test_slot_isolation():
+    """A request's result is identical whether served alone or packed with
+    different requests (fresh state per admitted request)."""
+    params = _params()
+    probe = _train(0.3, 42)
+    solo = SNNStreamEngine(params, CFG, num_slots=1, chunk_steps=5).run(
+        [StreamRequest(spikes=probe)]
+    )[0]
+    packed = SNNStreamEngine(params, CFG, num_slots=3, chunk_steps=5).run(
+        [StreamRequest(spikes=_train(0.6, 1)),
+         StreamRequest(spikes=probe),
+         StreamRequest(spikes=_train(0.1, 2)),
+         StreamRequest(spikes=_train(0.9, 3))]
+    )[1]
+    np.testing.assert_allclose(solo.spike_counts, packed.spike_counts)
+    np.testing.assert_allclose(
+        solo.events_per_layer, packed.events_per_layer
+    )
+
+
+def test_measured_energy_tracks_activity():
+    params = _params()
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=10)
+    res = eng.run(
+        [StreamRequest(spikes=_train(0.05, 0)),
+         StreamRequest(spikes=_train(0.7, 1))]
+    )
+    sparse, busy = res
+    assert sparse.spike_rate < busy.spike_rate
+    assert sparse.energy_pj < busy.energy_pj
+    assert sparse.events_per_layer[0] < busy.events_per_layer[0]
+    assert eng.events_per_sec() > 0
+
+
+def test_throughput_counters_are_per_run():
+    params = _params()
+    eng = SNNStreamEngine(params, CFG, num_slots=1, chunk_steps=10)
+    assert eng.events_per_sec() == 0.0  # no run yet
+    eng.run([StreamRequest(spikes=_train(0.3, 0))])
+    first_events = eng.total_events
+    eng.run([StreamRequest(spikes=_train(0.3, 0))])
+    assert eng.total_events == first_events  # counters reset, not stacked
+
+
+def test_rate_coded_image_requests():
+    params = _params()
+    rng = np.random.default_rng(5)
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5)
+    imgs = rng.random((3, CFG.layer_sizes[0])).astype(np.float32)
+    results = eng.run([StreamRequest(image=im) for im in imgs])
+    assert len(results) == 3
+    for r in results:
+        assert r.prediction in (0, 1)
+        assert 0.0 < r.spike_rate < 1.0
