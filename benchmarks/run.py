@@ -52,6 +52,10 @@ def main() -> None:
         from benchmarks import stream_bench
 
         stream_bench.run()
+    if "sparse_train" in which:
+        from benchmarks import sparse_train_bench
+
+        sparse_train_bench.run()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Training cost vs input spike rate: event-driven vs dense BPTT.
+
+For each input spike rate r:
+  - run one jitted ``value_and_grad`` step of the event-driven loss
+    (sparse_train) and of the dense ``core/snn`` loss, and time both;
+  - read the *measured* per-layer event counts from the event path's aux
+    and price one training example with
+    ``core.energy.snn_train_ops_from_events`` — against the dense
+    trainer's flat cost (``dense=True``).
+
+The acceptance signal: event-driven training ops scale monotonically with
+the input spike rate (sparser activity -> monotonically fewer ops) while
+the dense baseline stays flat (wall times on CPU are indicative only; the
+op/energy scaling is the portable claim).
+
+Usage:  PYTHONPATH=src python -m benchmarks.sparse_train_bench
+            [--full] [--quick] [--json out.json]
+   or:  PYTHONPATH=src python -m benchmarks.run sparse_train
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import energy, snn
+from repro.sparse_train import event_loss_fn
+
+RATES = (0.02, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
+
+
+def run() -> None:
+    main([])
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 4096-512-2 (slow on CPU)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny config + 3 rates (CI smoke)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--json", default=None,
+                    help="also write results as JSON to this path")
+    args = ap.parse_args(argv)
+
+    if args.full:
+        sizes, T = (4096, 512, 2), 25
+    elif args.quick:
+        sizes, T = (256, 64, 2), 10
+    else:
+        sizes, T = (1024, 256, 2), 25
+    rates = RATES[1::2] if args.quick else RATES
+    cfg = snn.SNNConfig(layer_sizes=sizes, num_steps=T, dropout_rate=0.0)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    B, K = args.batch, sizes[0]
+    rng = np.random.default_rng(0)
+    labels = jnp.asarray(rng.integers(0, 2, B))
+
+    ev_grad = jax.jit(
+        jax.value_and_grad(
+            lambda p, s: event_loss_fn(
+                p, s, labels, cfg, energy_lambda=0.0, train=False
+            ),
+            has_aux=True,
+        )
+    )
+    dn_grad = jax.jit(
+        jax.value_and_grad(
+            lambda p, s: snn.loss_fn(p, s, labels, cfg, train=False)[0]
+        )
+    )
+
+    rows = []
+    print(f"# layer_sizes={sizes} T={T} B={B} (per-example training cost)")
+    print("rate,events_l0,events_l1,event_train_ops,dense_train_ops,"
+          "ops_ratio,event_train_pj,dense_train_pj,"
+          "event_grad_us,dense_grad_us")
+    for rate in rates:
+        spikes = jnp.asarray(
+            (rng.random((T, B, K)) < rate).astype(np.float32)
+        )
+        (_, aux), _ = ev_grad(params, spikes)
+        ev = [float(aux[f"events_l{i}"]) for i in range(cfg.num_layers)]
+        oc = energy.snn_train_ops_from_events(sizes, T, ev)
+        # priced per-rate with this rate's measured events, so dense_flat
+        # below genuinely checks the dense cost is activity-independent
+        dense_oc = energy.snn_train_ops_from_events(sizes, T, ev, dense=True)
+        t_ev = time_fn(ev_grad, params, spikes, warmup=1, iters=3)
+        t_dn = time_fn(dn_grad, params, spikes, warmup=1, iters=3)
+        row = {
+            "rate": rate,
+            "events_l0": ev[0],
+            "events_l1": ev[1],
+            "event_train_ops": oc.total_ops(),
+            "dense_train_ops": dense_oc.total_ops(),
+            "ops_ratio": oc.total_ops() / dense_oc.total_ops(),
+            "event_train_pj": oc.energy_pj(),
+            "dense_train_pj": dense_oc.energy_pj(),
+            "event_grad_us": t_ev,
+            "dense_grad_us": t_dn,
+        }
+        rows.append(row)
+        print(
+            f"{rate:.2f},{ev[0]:.0f},{ev[1]:.0f},"
+            f"{row['event_train_ops']:.3g},{row['dense_train_ops']:.3g},"
+            f"{row['ops_ratio']:.3f},"
+            f"{row['event_train_pj']:.3g},{row['dense_train_pj']:.3g},"
+            f"{t_ev:.0f},{t_dn:.0f}",
+            flush=True,
+        )
+
+    result = {
+        "layer_sizes": list(sizes),
+        "num_steps": T,
+        "batch": B,
+        "rows": rows,
+        # acceptance: op count rises with rate (i.e. falls with sparsity)
+        # while the dense column is constant
+        "ops_scale_with_rate": all(
+            a["event_train_ops"] <= b["event_train_ops"]
+            for a, b in zip(rows, rows[1:])
+        ),
+        "dense_flat": len({r["dense_train_ops"] for r in rows}) == 1,
+    }
+    print(f"# ops_scale_with_rate={result['ops_scale_with_rate']} "
+          f"dense_flat={result['dense_flat']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -144,6 +144,51 @@ def run() -> None:
         f"published_ratio={(1093-143)/1093:.3f};matches_86pct_claim=True",
     )
 
+    # ---- GOPS/W cross-check vs the paper's measured Artix-7 table -------
+    # Price the paper-scale SNN from *event counts at the matched (trained,
+    # measured) spike rates* via snn_ops_from_events, and report how far the
+    # 45nm-op-model GOPS/W lands from the paper's watt-meter numbers.  The
+    # deviation is expected and documented: Horowitz per-op pJ excludes the
+    # FPGA's static/platform power, which dominates the Artix-7 measurement.
+    paper_sizes, paper_T = (4096, 512, 2), 25
+    matched_events = [
+        r * fi * paper_T for r, fi in zip(rates, paper_sizes[:-1])
+    ]
+    snn_meas = energy.snn_ops_from_events(paper_sizes, paper_T, matched_events)
+    for name, oc in (("snn", snn_meas), ("bcnn36", bcnn36_ops)):
+        paper_row = energy.PAPER_TABLE2[name]
+        model_gopsw = oc.gops_per_watt()
+        dev = energy.gopsw_deviation(model_gopsw, paper_row["gops_per_w"])
+        emit(
+            f"table2/gopsw_crosscheck_{name}",
+            0.0,
+            f"model_gopsw={model_gopsw:.0f};"
+            f"paper_gopsw={paper_row['gops_per_w']:.0f};"
+            f"deviation={dev:+.2f};"
+            f"matched_rates={','.join(f'{r:.3f}' for r in rates)};"
+            "note=op-model-excludes-platform-power",
+        )
+    # The SNN GOPS/W lands within ~1/3 of the Artix-7 measurement; the
+    # BCNN's deviates wildly because GOPS/W *rewards cheap ops* (a 0.02 pJ
+    # XNOR counts the same as a 0.1 pJ add) while the paper's number folds
+    # in the whole FPGA's power draw.  The portable cross-check is energy
+    # per classification — emitted above as table2/energy_reduction
+    # (model 0.856 vs the paper's 0.86 claim).
+    model_ratio = snn_meas.gops_per_watt() / bcnn36_ops.gops_per_watt()
+    paper_ratio = (
+        energy.PAPER_TABLE2["snn"]["gops_per_w"]
+        / energy.PAPER_TABLE2["bcnn36"]["gops_per_w"]
+    )
+    emit(
+        "table2/gopsw_ratio_crosscheck",
+        0.0,
+        f"model_snn_over_bcnn={model_ratio:.2f};"
+        f"paper_snn_over_bcnn={paper_ratio:.2f};"
+        f"ratio_deviation={energy.gopsw_deviation(model_ratio, paper_ratio):+.2f};"
+        "note=gopsw-rewards-cheap-xnor-ops,see-energy_reduction-row-for-the-"
+        "portable-per-inference-comparison",
+    )
+
 
 if __name__ == "__main__":
     run()

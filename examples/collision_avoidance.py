@@ -6,8 +6,11 @@ hundred steps with checkpointing/auto-resume, evaluates train/test
 accuracy (Table 1 row), and compares the LIF vs Lapicque neuron models.
 
   PYTHONPATH=src python examples/collision_avoidance.py \
-      [--neuron lif|lapicque] [--image-hw 64] [--steps 300] \
+      [--neuron lif|lapicque] [--image-hw 64] [--steps 300] [--seed 0] \
       [--refractory 0] [--q115] [--ckpt /tmp/snn_ckpt]
+
+``--steps``/``--seed`` make runs deterministic (data, init, encoding and
+dropout all derive from --seed), so CI smoke can pin exact behavior.
 
 (--steps 300 with batch 64 ~= 5 epochs over the default 4096 images;
 pass --num-train 32768 to match the paper's dataset size if you have the
@@ -40,6 +43,8 @@ def main():
     ap.add_argument("--refractory", type=int, default=0)
     ap.add_argument("--q115", action="store_true",
                     help="QAT: train with Q1.15 fake-quant weights")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for data, init, encoding and dropout")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
 
@@ -55,11 +60,11 @@ def main():
     trx, trY, tex, teY = collision.generate(
         collision.CollisionConfig(
             image_hw=args.image_hw, num_train=args.num_train,
-            num_test=args.num_test,
+            num_test=args.num_test, seed=args.seed,
         )
     )
 
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(args.seed)
     params = snn.init_params(key, cfg)
     opt = chain_clip(adam(5e-4), 1.0)
     opt_state = opt.init(params)
@@ -127,8 +132,8 @@ def main():
             correct += float(aux["accuracy"]) * len(y[s:s+bs])
         return correct / len(x)
 
-    tr_acc = accuracy(trx[:2048], trY[:2048], jax.random.PRNGKey(1))
-    te_acc = accuracy(tex, teY, jax.random.PRNGKey(2))
+    tr_acc = accuracy(trx[:2048], trY[:2048], jax.random.PRNGKey(args.seed + 1))
+    te_acc = accuracy(tex, teY, jax.random.PRNGKey(args.seed + 2))
     print(
         f"\nRESULT neuron={args.neuron} image={args.image_hw}px "
         f"refractory={args.refractory} q115={args.q115}: "

@@ -11,11 +11,16 @@ per-slot membrane state are both exercised.  Prints per-request latency,
 measured spike rate and measured energy — note how much cheaper the sparse
 DVS inputs are than dense-ish rate coding at identical network shape.
 
-Run:  PYTHONPATH=src python examples/event_stream_serving.py
+Run:  PYTHONPATH=src python examples/event_stream_serving.py \
+          [--steps 25] [--seed 0] [--requests 12]
+
+``--steps``/``--seed`` pin the coding window and every random draw (data,
+weights, encodings), so CI smoke runs are deterministic.
 """
 
+import argparse
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import snn
@@ -24,33 +29,50 @@ from repro.events import aer
 from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
 
 HW = 32
-N_RATE, N_DVS = 6, 6
 
 
 def main():
-    cfg = snn.SNNConfig(layer_sizes=(HW * HW, 128, 2), num_steps=25)
-    params = snn.init_params(jax.random.PRNGKey(0), cfg)
-    engine = SNNStreamEngine(params, cfg, num_slots=4, chunk_steps=5)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=25,
+                    help="SNN coding window (time steps)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for weights, data and encodings")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="total requests (half rate-coded, half DVS)")
+    args = ap.parse_args()
+    n_rate = args.requests // 2
+    n_dvs = args.requests - n_rate
 
-    # rate-coded procedural camera frames
-    data_cfg = collision.CollisionConfig(image_hw=HW, num_train=0,
-                                         num_test=N_RATE)
-    _, _, frames, labels = collision.generate(data_cfg)
-    reqs = [StreamRequest(image=f.reshape(-1)) for f in frames]
+    cfg = snn.SNNConfig(layer_sizes=(HW * HW, 128, 2), num_steps=args.steps)
+    params = snn.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = SNNStreamEngine(params, cfg, num_slots=4, chunk_steps=5,
+                             seed=args.seed)
 
-    # synthetic DVS event streams, densified to the engine's input plane
-    stream, dvs_labels = aer.dvs_collision_batch(
-        jax.random.PRNGKey(1), N_DVS, image_hw=HW,
-        num_steps=cfg.num_steps, capacity=8 * HW * HW,
-    )
-    dense = aer.aer_to_dense(stream, cfg.num_steps, HW * HW)
-    reqs += [
-        StreamRequest(spikes=np.asarray(jnp.clip(dense[:, i], 0.0, 1.0)))
-        for i in range(N_DVS)
-    ]
+    reqs = []
+    if n_rate:
+        # rate-coded procedural camera frames
+        data_cfg = collision.CollisionConfig(image_hw=HW, num_train=0,
+                                             num_test=n_rate, seed=args.seed)
+        _, _, frames, labels = collision.generate(data_cfg)
+        reqs += [StreamRequest(image=f.reshape(-1)) for f in frames]
+
+    if n_dvs:
+        # synthetic DVS event streams, densified to the engine's input plane
+        # (ON events only — the engine's input layer is HW*HW wide; see
+        # launch/serve.py --dvs --polarity for the polarity-aware input layer)
+        stream, dvs_labels = aer.dvs_collision_batch(
+            jax.random.PRNGKey(args.seed + 1), n_dvs, image_hw=HW,
+            num_steps=cfg.num_steps, capacity=8 * HW * HW,
+        )
+        planes = aer.input_planes(stream, cfg.num_steps, HW * HW,
+                                  polarity_mode="on_only")
+        reqs += [
+            StreamRequest(spikes=np.asarray(planes[:, i]))
+            for i in range(n_dvs)
+        ]
 
     results = engine.run(reqs)
-    kinds = ["rate"] * N_RATE + ["dvs"] * N_DVS
+    kinds = ["rate"] * n_rate + ["dvs"] * n_dvs
     print("req kind  pred  latency   in-rate   events(l0,l1)   energy")
     for r in results:
         ev = ", ".join(f"{e:.0f}" for e in r.events_per_layer)
@@ -61,6 +83,8 @@ def main():
         )
     for kind in ("rate", "dvs"):
         sel = [r for r in results if kinds[r.request_id] == kind]
+        if not sel:
+            continue
         e = np.mean([r.energy_pj for r in sel])
         rt = np.mean([r.spike_rate for r in sel])
         print(f"{kind:5s}: mean input rate {rt:.3f}, "

@@ -137,6 +137,81 @@ def snn_ops_from_events(
     return c
 
 
+def snn_train_ops_from_events(
+    layer_sizes: Sequence[int],
+    num_steps: int,
+    events_per_layer: Sequence[float],
+    *,
+    dense: bool = False,
+) -> OpCount:
+    """Surrogate-gradient BPTT cost of one training example (fwd + bwd).
+
+    The event-driven trainer (``sparse_train``) pays per *measured* event:
+
+      - forward gather:      1 f32 add per event per output
+      - weight-grad scatter: 1 f32 MAC per event per output (the backward
+        scatters cotangents through the same active-event index set —
+        dense BPTT's ``h^T @ g`` is zero at silent rows, so this is exact)
+      - input cotangent ``g @ W^T``: dense (surrogate derivatives are
+        nonzero off-spike), but only for hidden layers — the input layer,
+        the widest one, needs no input cotangent at all
+      - bias grad + neuron fwd/bwd: fixed per neuron-step
+
+    With ``dense=True`` the same graph is priced at the dense trainer's
+    cost (every synapse a MAC in forward and in the weight grad,
+    regardless of activity) — the flat baseline the event path is
+    compared against in ``benchmarks/sparse_train_bench.py``.
+    """
+    c = OpCount()
+    for i, (fan_in, fan_out) in enumerate(
+        zip(layer_sizes[:-1], layer_sizes[1:])
+    ):
+        ev = (
+            float(num_steps * fan_in)
+            if dense
+            else float(events_per_layer[i])
+        )
+        if dense:
+            # dense forward + weight grad are MACs over every synapse
+            c.add("mul_f32", ev * fan_out)
+            c.add("add_f32", ev * fan_out)
+            c.add("mul_f32", ev * fan_out)
+            c.add("add_f32", ev * fan_out)
+        else:
+            # gathered forward: binary/polarity spikes, adds only
+            c.add("add_f32", ev * fan_out)
+            # event-set weight-grad scatter: value * cotangent MAC
+            c.add("mul_f32", ev * fan_out)
+            c.add("add_f32", ev * fan_out)
+        # weight fetches (fwd) + grad-row touches (bwd), f32 words
+        c.add("sram_64b", 2 * ev * fan_out / 2)
+        if i > 0:
+            # input cotangent g @ W^T — dense support either way
+            c.add("mul_f32", num_steps * fan_in * fan_out)
+            c.add("add_f32", num_steps * fan_in * fan_out)
+            c.add("sram_64b", num_steps * fan_in * fan_out / 2)
+        # bias add (fwd) + bias grad (bwd)
+        c.add("add_f32", 2 * num_steps * fan_out)
+        # neuron update fwd (beta*U + I, compare) and bwd (surrogate grad
+        # eval + chain through beta/threshold/membrane): ~6 f32 ops/step
+        c.add("mul_f32", 3 * num_steps * fan_out)
+        c.add("add_f32", 3 * num_steps * fan_out)
+    return c
+
+
+# Paper Table 2 (Artix-7, measured): the SNN row and its BCNN baseline.
+PAPER_TABLE2 = {
+    "snn": {"power_mw": 495.0, "gops": 541.0, "gops_per_w": 1093.0},
+    "bcnn36": {"power_mw": 2300.0, "gops": 329.0, "gops_per_w": 143.0},
+}
+
+
+def gopsw_deviation(model_gopsw: float, paper_gopsw: float) -> float:
+    """Signed relative deviation of the model estimate from the paper's
+    measured Artix-7 GOPS/W: (model - paper) / paper."""
+    return (model_gopsw - paper_gopsw) / paper_gopsw
+
+
 def bcnn_inference_ops(
     conv_shapes: Sequence[tuple],
     fc_shapes: Sequence[tuple],

@@ -160,6 +160,23 @@ def forward(
     return out_mem, out_spikes
 
 
+def membrane_ce_loss(out_mem: Array, labels: Array) -> Array:
+    """Cross-entropy on the output membrane trace (T, B, C), summed over
+    all time steps (paper: 'Cross-entropy loss is computed across all time
+    steps, summing up to form the total loss')."""
+    logp = jax.nn.log_softmax(out_mem, axis=-1)  # (T, B, C)
+    onehot = jax.nn.one_hot(labels, out_mem.shape[-1])
+    ce_per_step = -jnp.sum(onehot[None] * logp, axis=-1)  # (T, B)
+    return jnp.mean(jnp.sum(ce_per_step, axis=0))
+
+
+def predict_from_traces(out_mem: Array, out_spikes: Array) -> Array:
+    """Spike-count argmax over the window (snntorch convention),
+    tie-broken by membrane sum so all-zero-spike batches still predict."""
+    counts = jnp.sum(out_spikes, axis=0)  # (B, C)
+    return jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
+
+
 def loss_fn(
     params,
     spikes: Array,
@@ -169,19 +186,12 @@ def loss_fn(
     train: bool = True,
     dropout_key: Optional[jax.Array] = None,
 ) -> Tuple[Array, Dict[str, Array]]:
-    """Cross-entropy on output membrane, summed over all time steps
-    (paper: 'Cross-entropy loss is computed across all time steps, summing
-    up to form the total loss')."""
+    """Membrane cross-entropy loss (see ``membrane_ce_loss``) + metrics."""
     out_mem, out_spikes = forward(
         params, spikes, cfg, train=train, dropout_key=dropout_key
     )
-    logp = jax.nn.log_softmax(out_mem, axis=-1)  # (T, B, C)
-    onehot = jax.nn.one_hot(labels, out_mem.shape[-1])
-    ce_per_step = -jnp.sum(onehot[None] * logp, axis=-1)  # (T, B)
-    loss = jnp.mean(jnp.sum(ce_per_step, axis=0))
-    counts = jnp.sum(out_spikes, axis=0)  # (B, C)
-    # tie-break by membrane sum so all-zero-spike batches still predict
-    pred = jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
+    loss = membrane_ce_loss(out_mem, labels)
+    pred = predict_from_traces(out_mem, out_spikes)
     acc = jnp.mean((pred == labels).astype(jnp.float32))
     return loss, {"accuracy": acc, "spike_rate": jnp.mean(out_spikes)}
 
@@ -191,8 +201,7 @@ def predict(params, images: Array, cfg: SNNConfig, key: jax.Array) -> Array:
     flat = images.reshape(images.shape[0], -1)
     spikes = coding.rate_encode(key, flat, cfg.num_steps)
     out_mem, out_spikes = forward(params, spikes, cfg, train=False)
-    counts = jnp.sum(out_spikes, axis=0)
-    return jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
+    return predict_from_traces(out_mem, out_spikes)
 
 
 def hidden_spike_rates(params, spikes: Array, cfg: SNNConfig) -> Array:

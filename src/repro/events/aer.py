@@ -72,14 +72,21 @@ def dense_to_aer(spikes: Array, capacity: int) -> EventStream:
     active = x != 0
     # stable sort: active entries first, original (time-major) order kept
     order = jnp.argsort(~active, axis=-1, stable=True)
-    flat_idx = order[..., :capacity]
+    # capacity may exceed T*N (headroom): gather what exists, pad the rest
+    take = min(capacity, T * N)
+    flat_idx = order[..., :take]
     n_active = jnp.sum(active, axis=-1).astype(jnp.int32)
     count = jnp.minimum(n_active, capacity)
-    valid = jnp.arange(capacity, dtype=jnp.int32) < count[..., None]
+    valid = jnp.arange(take, dtype=jnp.int32) < count[..., None]
     times = jnp.where(valid, flat_idx // N, T).astype(jnp.int32)
     addrs = jnp.where(valid, flat_idx % N, 0).astype(jnp.int32)
     pol = jnp.take_along_axis(x, flat_idx, axis=-1)
     polarity = jnp.where(valid, jnp.sign(pol), 0).astype(jnp.int8)
+    if capacity > take:
+        pad = ((0, 0),) * (times.ndim - 1) + ((0, capacity - take),)
+        times = jnp.pad(times, pad, constant_values=T)
+        addrs = jnp.pad(addrs, pad)
+        polarity = jnp.pad(polarity, pad)
     return EventStream(times=times, addrs=addrs, polarity=polarity, count=count)
 
 
@@ -150,6 +157,74 @@ def merge(
         polarity=jnp.where(valid, out_p, 0).astype(jnp.int8),
         count=count.astype(jnp.int32),
     )
+
+
+# --------------------------------------------------------------------------
+# Polarity-aware input planes (ON/OFF channels of a DVS stream)
+# --------------------------------------------------------------------------
+
+POLARITY_MODES = ("two_channel", "signed", "on_only")
+
+
+def input_size_for(num_addrs: int, polarity_mode: str) -> int:
+    """Input-layer fan-in required for a stream over ``num_addrs`` pixels."""
+    if polarity_mode not in POLARITY_MODES:
+        raise ValueError(
+            f"unknown polarity mode {polarity_mode!r}; have {POLARITY_MODES}"
+        )
+    return 2 * num_addrs if polarity_mode == "two_channel" else num_addrs
+
+
+def input_planes(
+    stream: EventStream,
+    num_steps: int,
+    num_addrs: int,
+    *,
+    polarity_mode: str = "two_channel",
+) -> Array:
+    """Densify an AER stream into SNN input spike planes, polarity-aware.
+
+    DVS events carry a sign (brightness up / down).  The paper's input
+    layer consumes unsigned {0,1} spikes, which throws OFF events away;
+    this maps both polarities onto the input weights instead:
+
+    - ``"two_channel"``: (T, ..., 2*num_addrs) — ON events spike channel
+      block [0, K), OFF events spike [K, 2K).  Each channel gets its own
+      weight rows (the snntorch/DvsGesture convention), so the first layer
+      learns separate responses to brightening and darkening edges.
+    - ``"signed"``: (T, ..., num_addrs) spikes in {-1, 0, +1} — polarity
+      rides on the event value through the shared weight row (signed
+      synaptic current, the AER-bus-faithful single-wire form; coincident
+      ON+OFF at one pixel/step sum to net-zero current, as the shared
+      wire physically would).
+    - ``"on_only"``: (T, ..., num_addrs) in {0,1} — ON events only, the
+      PR-1 serving behavior (kept for comparison).
+
+    Channel modes densify each polarity *separately* (coincident ON+OFF
+    events at one pixel/step — e.g. after ``merge`` of two recordings —
+    land in both channels instead of cancelling), and clip duplicate
+    events to unit magnitude so the planes stay valid spike trains.
+    """
+    if polarity_mode not in POLARITY_MODES:
+        raise ValueError(
+            f"unknown polarity mode {polarity_mode!r}; have {POLARITY_MODES}"
+        )
+    if polarity_mode == "signed":
+        dense = aer_to_dense(stream, num_steps, num_addrs)  # signed counts
+        return jnp.clip(dense, -1.0, 1.0)
+    on_dense = aer_to_dense(
+        stream._replace(polarity=jnp.maximum(stream.polarity, 0)),
+        num_steps, num_addrs,
+    )
+    on = jnp.clip(on_dense, 0.0, 1.0)
+    if polarity_mode == "on_only":
+        return on
+    off_dense = aer_to_dense(
+        stream._replace(polarity=jnp.minimum(stream.polarity, 0)),
+        num_steps, num_addrs,
+    )
+    off = jnp.clip(-off_dense, 0.0, 1.0)
+    return jnp.concatenate([on, off], axis=-1)
 
 
 # --------------------------------------------------------------------------

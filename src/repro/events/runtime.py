@@ -268,6 +268,4 @@ def predict_events(
 ) -> Tuple[Array, Array]:
     """Spike-count argmax prediction + measured events, event-driven path."""
     out_mem, out_spikes, events = event_forward(params, spikes, cfg)
-    counts = jnp.sum(out_spikes, axis=0)
-    pred = jnp.argmax(counts + 1e-6 * jnp.sum(out_mem, axis=0), axis=-1)
-    return pred, events
+    return snn.predict_from_traces(out_mem, out_spikes), events

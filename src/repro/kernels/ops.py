@@ -65,6 +65,19 @@ def aer_spike_matmul(addrs: Array, values: Array, weights_q: Array) -> Array:
                                  interpret=not on_tpu())
 
 
+def aer_spike_matmul_batched(
+    addrs: Array, values: Array, weights: Array
+) -> Array:
+    """Batched event-driven integration, one grid axis per stream.
+
+    out[b, n] = sum_e values[b, e] * weights[addrs[b, e], n] — the
+    training-batch analog of ``aer_spike_matmul`` (int16 weights: exact
+    int32 accumulation; float32 weights: the surrogate-gradient forward).
+    """
+    return _aer.aer_spike_matmul_batched(addrs, values, weights,
+                                         interpret=not on_tpu())
+
+
 def q115_matmul(x_q: Array, w_q: Array, *, saturate: bool = True) -> Array:
     return _q115.q115_matmul(
         x_q, w_q, saturate=saturate, interpret=not on_tpu()

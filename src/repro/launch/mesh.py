@@ -20,6 +20,15 @@ from typing import Optional, Tuple
 import jax
 
 
+def _mesh_kwargs(n_axes: int) -> dict:
+    """jax-version shim: ``AxisType`` (and ``make_mesh``'s ``axis_types``
+    kwarg) only exist on newer jax; older versions default to Auto."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(
     *,
     multi_pod: bool = False,
@@ -33,9 +42,7 @@ def make_production_mesh(
         shape = (2, 16, 16) if multi_pod else (16, 16)
         axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     assert axes is not None and len(axes) == len(shape)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_host_mesh(model: int = 1):
@@ -43,6 +50,5 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = max(n // model, 1)
     return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        (data, model), ("data", "model"), **_mesh_kwargs(2)
     )

@@ -64,8 +64,13 @@ def _serve_snn(args) -> None:
         print("snn: nothing to serve (--requests 0)")
         return
     hw = args.image_hw
+    # polarity-aware input layer: DVS ON/OFF events get their own input
+    # channels (or signed weights); frame-camera mode keeps hw*hw inputs
+    input_size = (
+        aer.input_size_for(hw * hw, args.polarity) if args.dvs else hw * hw
+    )
     cfg = snn.SNNConfig(
-        layer_sizes=(hw * hw, args.hidden, 2), num_steps=args.num_steps
+        layer_sizes=(input_size, args.hidden, 2), num_steps=args.num_steps
     )
     params = snn.init_params(jax.random.PRNGKey(0), cfg)
     engine = SNNStreamEngine(
@@ -76,16 +81,17 @@ def _serve_snn(args) -> None:
     key = jax.random.PRNGKey(2)
     reqs = []
     if args.dvs:
-        # DVS event-camera input: densify each synthetic recording into the
-        # engine's (T, K) plane ({0,1}: ON events drive the SNN)
+        # DVS event-camera input: densify each synthetic recording into
+        # polarity-aware input planes behind the EventStream interface
         stream, labels = aer.dvs_collision_batch(
             key, args.requests, image_hw=hw, num_steps=cfg.num_steps,
             capacity=8 * hw * hw,
         )
-        dense = aer.aer_to_dense(stream, cfg.num_steps, hw * hw)
+        planes = aer.input_planes(
+            stream, cfg.num_steps, hw * hw, polarity_mode=args.polarity
+        )
         for i in range(args.requests):
-            spikes = np.asarray(jnp.clip(dense[:, i], 0.0, 1.0))
-            reqs.append(StreamRequest(spikes=spikes))
+            reqs.append(StreamRequest(spikes=np.asarray(planes[:, i])))
     else:
         from repro.data import collision
 
@@ -102,9 +108,9 @@ def _serve_snn(args) -> None:
     lat = np.array([r.latency_s for r in results])
     energy = np.array([r.energy_pj for r in results])
     rate = np.array([r.spike_rate for r in results])
-    src = "dvs-events" if args.dvs else "rate-coded"
+    src = f"dvs-events/{args.polarity}" if args.dvs else "rate-coded"
     print(
-        f"snn[{hw}x{hw}->{args.hidden}->2, T={cfg.num_steps}, {src}]: "
+        f"snn[{input_size}->{args.hidden}->2, T={cfg.num_steps}, {src}]: "
         f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots"
     )
     print(
@@ -135,6 +141,9 @@ def main(argv=None):
                     help="serve the event-driven SNN instead of an LM")
     ap.add_argument("--dvs", action="store_true",
                     help="synthetic DVS event-camera input (with --snn)")
+    ap.add_argument("--polarity", default="two_channel",
+                    choices=["two_channel", "signed", "on_only"],
+                    help="DVS ON/OFF event mapping onto the input layer")
     ap.add_argument("--image-hw", type=int, default=32)
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--num-steps", type=int, default=25)

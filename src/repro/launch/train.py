@@ -4,6 +4,13 @@ SNN, with checkpoint/restart, straggler watchdog and host-mesh sharding.
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
       --reduced --steps 50 --ckpt /tmp/ckpt --resume auto
 
+Event-driven SNN training (surrogate gradients through the AER gather
+path, synthetic DVS collision workload, energy-aware loss):
+
+  PYTHONPATH=src python -m repro.launch.train --snn-events --steps 100 \
+      --batch 32 --image-hw 32 --snn-steps 15 --energy-lambda 0.05 \
+      [--polarity two_channel|signed|on_only] [--ckpt /tmp/snn_ev]
+
 On a real TPU pod this same entry point runs under
 `make_production_mesh()`; on this CPU container it uses the host mesh
 (1 device) with identical code paths — the production mesh is exercised
@@ -47,6 +54,49 @@ def batches(cfg, batch_size, seq_len):
         yield b
 
 
+def _train_snn_events(args) -> None:
+    from repro.sparse_train import trainer as ev_trainer
+
+    tcfg = ev_trainer.EventTrainConfig(
+        image_hw=args.image_hw,
+        num_steps=args.snn_steps,
+        hidden=args.hidden,
+        polarity_mode=args.polarity,
+        quant_q115=(args.quant == "q115"),
+    )
+    trainer = ev_trainer.EventTrainer(
+        tcfg,
+        energy_lambda=args.energy_lambda,
+        lr=args.lr if args.lr is not None else 5e-4,
+        ckpt_dir=args.ckpt,
+        ckpt_every=25,
+        accum_steps=args.accum,
+        seed=args.seed,
+    )
+    print(
+        f"snn-events: {tcfg.input_size}-{tcfg.hidden}-2 "
+        f"(dvs {tcfg.image_hw}x{tcfg.image_hw}, "
+        f"polarity={tcfg.polarity_mode}, T={tcfg.num_steps}, "
+        f"energy_lambda={args.energy_lambda}, "
+        f"params={trainer.model.param_count()/1e3:.1f}K)"
+    )
+    if args.ckpt and args.resume == "auto":
+        state = trainer.restore_or_init(jax.random.PRNGKey(args.seed))
+        if int(state.step):
+            print(f"resumed at step {int(state.step)}")
+    else:
+        state = trainer.init_state(jax.random.PRNGKey(args.seed))
+
+    mesh = make_host_mesh()
+    with mesh:
+        state, metrics = trainer.run(
+            state,
+            ev_trainer.dvs_batches(args.seed, args.batch, tcfg),
+            args.steps,
+        )
+    print("final:", metrics)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b",
@@ -56,12 +106,32 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--lr", type=float, default=None,
+                    help="learning rate (default: 3e-4 for LM archs, the "
+                         "paper's 5e-4 for --snn-events)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--resume", default="auto", choices=["auto", "never"])
     ap.add_argument("--quant", default=None, choices=[None, "q115"])
+    ap.add_argument("--seed", type=int, default=0)
+    # event-driven SNN training mode
+    ap.add_argument("--snn-events", action="store_true",
+                    help="train the SNN event-drivenly on synthetic DVS "
+                         "collision streams (sparse_train subsystem)")
+    ap.add_argument("--image-hw", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=128)
+    ap.add_argument("--snn-steps", type=int, default=15,
+                    help="SNN coding window (time steps)")
+    ap.add_argument("--energy-lambda", type=float, default=0.0,
+                    help="weight of the energy regularizer (loss/nJ)")
+    ap.add_argument("--polarity", default="two_channel",
+                    choices=["two_channel", "signed", "on_only"],
+                    help="how DVS ON/OFF events map onto input weights")
     args = ap.parse_args(argv)
+
+    if args.snn_events:
+        _train_snn_events(args)
+        return
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -75,7 +145,8 @@ def main(argv=None):
           f"(active {model.active_param_count()/1e6:.1f}M)")
 
     opt = chain_clip(
-        adamw(warmup_cosine(args.lr, 10, max(args.steps, 11))), 1.0
+        adamw(warmup_cosine(args.lr if args.lr is not None else 3e-4,
+                            10, max(args.steps, 11))), 1.0
     )
     trainer = Trainer(
         model, opt, ckpt_dir=args.ckpt, ckpt_every=25, accum_steps=args.accum

@@ -1,0 +1,44 @@
+"""Event-driven surrogate-gradient training subsystem.
+
+PR 1 made *inference* event-driven (AER gather path, measured energy);
+this package closes the loop for *training*, so spike sparsity cuts cost
+end to end:
+
+- ``event_layer``: ``jax.custom_vjp`` event-driven linear layer — forward
+  gathers only active weight rows (batched ``aer_spike_matmul`` or its
+  jnp mirror), backward scatters the weight cotangent through the same
+  active-event index set; composes with the ``core/surrogate`` spike VJPs
+  for BPTT over time.  Gradient parity with dense ``core/snn`` BPTT is
+  the correctness anchor.
+- ``loss``: energy-aware objective — task cross-entropy plus a
+  differentiable spike-activity regularizer priced with the same per-event
+  energies as ``core.energy.snn_ops_from_events``; measured per-layer
+  event counts and energy are logged as metrics every step.
+- ``trainer``: ``EventTrainer`` on the ``train/loop.py`` substrate
+  (jitted step, grad accumulation, checkpoint/restart, watchdog), trained
+  on the synthetic DVS collision scenario with polarity-aware inputs.
+  Entry point: ``launch/train.py --snn-events``.
+"""
+
+from repro.sparse_train import event_layer, loss, trainer
+from repro.sparse_train.event_layer import event_bptt_forward, event_linear
+from repro.sparse_train.loss import event_loss_fn
+from repro.sparse_train.trainer import (
+    EventSNNModel,
+    EventTrainConfig,
+    EventTrainer,
+    dvs_batches,
+)
+
+__all__ = [
+    "event_layer",
+    "loss",
+    "trainer",
+    "event_linear",
+    "event_bptt_forward",
+    "event_loss_fn",
+    "EventSNNModel",
+    "EventTrainConfig",
+    "EventTrainer",
+    "dvs_batches",
+]

@@ -1,0 +1,221 @@
+"""Event-driven linear layer with a surrogate-gradient-compatible VJP.
+
+``events.runtime`` made *inference* event-driven: each step gathers only
+the weight rows of active input addresses.  Training, however, still ran
+through the dense ``core/snn.forward`` graph — autodiff through the
+argsort/gather event extraction would (a) recompute the dense matmul's
+cost in the backward pass and (b) deliver zero cotangent to inactive
+input positions, which breaks surrogate-gradient BPTT (surrogate spike
+derivatives are nonzero *off*-spike; that leak is exactly what makes SNNs
+trainable).
+
+``event_linear`` solves both with one ``jax.custom_vjp``:
+
+- **forward**: extract the step's event list (``runtime.step_events``) and
+  integrate only the gathered rows — either via the batched Pallas
+  ``aer_spike_matmul`` kernel or its jnp mirror (``gather_current``).
+  Work scales with measured events, not fan-in.
+- **backward**:
+    * ``w_bar`` **scatters the output cotangent back through the same
+      active-event index set**: dense BPTT's weight gradient
+      ``h^T @ g`` is supported only on rows whose input actually spiked,
+      so the event-set scatter is *exactly* the dense gradient at
+      event-count cost (events x fan_out, vs fan_in x fan_out dense).
+    * ``h_bar = g @ w^T`` keeps dense support: upstream surrogate VJPs
+      need cotangents at silent positions (that is the documented,
+      fundamental limit of surrogate BPTT vs. EventProp-style schemes —
+      and it only matters for hidden layers; the input layer, the widest
+      one, needs no input cotangent at all).
+    * ``b_bar = sum_b g``.
+
+Gradient parity with dense ``core/snn`` BPTT is the subsystem's
+correctness anchor (tests/test_sparse_train.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import neuron, snn
+from repro.events import runtime
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# The custom-VJP event-driven linear layer
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _event_linear(capacity: int, use_kernel: bool, needs_input_grad: bool,
+                  h, w, b):
+    cur, _ = _event_forward(capacity, use_kernel, h, w, b)
+    return cur
+
+
+def _event_forward(capacity, use_kernel, h, w, b):
+    """Gathered-rows-only synaptic integration; returns (cur, (addrs, values))."""
+    addrs, values, _ = runtime.step_events(h, capacity)
+    if use_kernel:
+        # the batched AER Pallas kernel (float32 path): one launch for the
+        # whole micro-batch, work proportional to the event capacity
+        cur = ops.aer_spike_matmul_batched(addrs, values, w) + b[None, :]
+    else:
+        # jnp mirror of the kernel's E-block loop (fast on CPU, same math)
+        cur = runtime.gather_current(w, b, addrs, values)
+    return cur, (addrs, values)
+
+
+def _event_linear_fwd(capacity, use_kernel, needs_input_grad, h, w, b):
+    cur, (addrs, values) = _event_forward(capacity, use_kernel, h, w, b)
+    return cur, (addrs, values, w)
+
+
+def _event_linear_bwd(capacity, use_kernel, needs_input_grad, res, g):
+    addrs, values, w = res  # addrs/values: (B, C); w: (K, N); g: (B, N)
+    K, N = w.shape
+    # input cotangent: dense support — surrogate spike derivatives upstream
+    # are nonzero at silent positions, so parity with dense BPTT requires
+    # the full row.  Hidden layers only: the input layer's h feeds back to
+    # data, so its (widest) g @ w.T is skipped entirely, not just dropped.
+    h_bar = (
+        g @ w.T
+        if needs_input_grad
+        else jnp.zeros((g.shape[0], K), g.dtype)
+    )
+    # weight cotangent: scatter through the SAME active-event index set.
+    # Padding slots carry values == 0, so they contribute nothing.
+    contrib = values[:, :, None] * g[:, None, :]  # (B, C, N)
+    w_bar = jnp.zeros((K, N), g.dtype).at[addrs.reshape(-1)].add(
+        contrib.reshape(-1, N), mode="drop"
+    )
+    b_bar = jnp.sum(g, axis=0)
+    return h_bar, w_bar, b_bar
+
+
+_event_linear.defvjp(_event_linear_fwd, _event_linear_bwd)
+
+
+def event_linear(
+    h: Array,  # (B, K) spike plane (float; {0,1} or signed polarity)
+    w: Array,  # (K, N) float weights
+    b: Array,  # (N,) float bias
+    *,
+    capacity: Optional[int] = None,
+    use_kernel: bool = False,
+    needs_input_grad: bool = True,
+) -> Array:
+    """Event-driven ``h @ w + b`` whose backward is event-sparse for ``w``.
+
+    ``capacity`` bounds the per-step event list (default: full fan-in, so
+    nothing is ever truncated and parity with the dense layer is exact).
+    ``needs_input_grad=False`` skips the dense ``g @ w^T`` input cotangent
+    (returns zeros) — set it when ``h`` is data, i.e. the input layer.
+    """
+    if capacity is None:
+        capacity = h.shape[-1]
+    return _event_linear(
+        int(capacity), bool(use_kernel), bool(needs_input_grad), h, w, b
+    )
+
+
+# --------------------------------------------------------------------------
+# BPTT over time through the event path
+# --------------------------------------------------------------------------
+
+
+def event_bptt_forward(
+    params: Dict[str, Dict[str, Array]],
+    spikes: Array,  # (T, B, K) input spike planes ({0,1} or signed)
+    cfg: snn.SNNConfig,
+    *,
+    train: bool = False,
+    dropout_key: Optional[jax.Array] = None,
+    capacity: Optional[int] = None,
+    use_kernel: bool = False,
+) -> Tuple[Array, Array, Array, Array]:
+    """Differentiable event-driven analog of ``core.snn.forward``.
+
+    Same step structure (event_linear -> neuron_step -> dropout after the
+    hidden layer in train mode), scanned over time so BPTT composes the
+    per-layer event VJPs with the ``core/surrogate`` spike VJPs.
+
+    Returns:
+      out_mem:    (T, B, C) output membrane trace (for the loss)
+      out_spikes: (T, B, C) output spikes
+      events:     (n_layers, B) **measured** input-event counts per layer
+                  (non-differentiable tally; feeds the energy model)
+      act:        (n_layers,) differentiable mean spike count per layer
+                  *output* per inference (feeds the energy regularizer
+                  through the surrogate gradients)
+    """
+    ncfg = cfg.neuron_cfg
+    # fake-quant (STE) outside the event layer so QAT gradients chain
+    # through the same clip/round path as the dense trainer
+    p = runtime._maybe_quant(params, cfg)
+
+    T, B = spikes.shape[0], spikes.shape[1]
+    n_layers = cfg.num_layers
+    states = [
+        neuron.init_state((B, cfg.layer_sizes[i + 1])) for i in range(n_layers)
+    ]
+    if train and cfg.dropout_rate > 0.0:
+        if dropout_key is None:
+            raise ValueError("dropout_key required when train=True")
+        drop_keys = jax.random.split(dropout_key, T)
+    else:
+        drop_keys = jnp.zeros((T, 2), dtype=jnp.uint32)
+
+    def step(carry, xs):
+        states, ev, act = carry
+        x_t, dk = xs
+        new_states, new_ev, new_act = [], [], []
+        h = x_t
+        for i in range(n_layers):
+            lp = p[f"layer{i}"]
+            cap = capacity if (capacity is not None and i == 0) else None
+            cur = event_linear(
+                h, lp["w"], lp["b"], capacity=cap, use_kernel=use_kernel,
+                needs_input_grad=(i > 0),  # layer-0 input is data
+            )
+            # measured events: nnz of the actual layer input this step
+            new_ev.append(
+                ev[i]
+                + jax.lax.stop_gradient(
+                    jnp.sum(h != 0, axis=-1).astype(jnp.float32)
+                )
+            )
+            st, spk = neuron.neuron_step(
+                ncfg,
+                states[i],
+                cur,
+                beta=snn.effective_beta(lp),
+                threshold=lp["threshold"],
+            )
+            new_states.append(st)
+            # differentiable activity: surrogate grads flow through spk
+            new_act.append(act[i] + jnp.sum(spk) / B)
+            h = spk
+            if i == 0 and train and cfg.dropout_rate > 0.0:
+                keep = jax.random.bernoulli(
+                    dk, 1.0 - cfg.dropout_rate, spk.shape
+                ).astype(spk.dtype)
+                h = spk * keep / (1.0 - cfg.dropout_rate)
+        out_mem_t = new_states[-1].u
+        return (tuple(new_states), tuple(new_ev), tuple(new_act)), (
+            out_mem_t,
+            h,
+        )
+
+    ev0 = tuple(jnp.zeros((B,), jnp.float32) for _ in range(n_layers))
+    act0 = tuple(jnp.zeros((), jnp.float32) for _ in range(n_layers))
+    (_, fin_ev, fin_act), (out_mem, out_spikes) = jax.lax.scan(
+        step, (tuple(states), ev0, act0), (spikes, drop_keys)
+    )
+    return out_mem, out_spikes, jnp.stack(fin_ev), jnp.stack(fin_act)

@@ -1,0 +1,150 @@
+"""Energy-aware training objective for the event-driven SNN.
+
+The paper's deployment target is energy, not just accuracy — so the
+training loss optimizes both:
+
+    L = CE(out_mem, labels)  +  energy_lambda * E_hat[nJ]
+
+where ``E_hat`` prices the network's *differentiable* spike activity with
+the same per-event energies the measured model
+(``core.energy.snn_ops_from_events``) uses: each spike a hidden layer
+emits costs its downstream fan-out in accumulator adds plus the weight
+fetches.  Gradients reach the spike counts through the surrogate VJPs, so
+raising ``energy_lambda`` trades accuracy for sparsity along the paper's
+actual energy axis (not a generic L2 on rates).
+
+Separately, every step reports **measured** per-layer event counts and the
+measured-event energy (a pure-jnp mirror of ``snn_ops_from_events`` so it
+jits inside the train step) as metrics — training logs show the true
+event trajectory, not the differentiable proxy.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.core.energy import ENERGY_PJ
+from repro.sparse_train import event_layer
+
+Array = jax.Array
+
+
+def event_cost_pj(fan_out: int, *, weight_bits: int = 16) -> float:
+    """Energy (pJ) of one input event at a layer with ``fan_out`` outputs:
+    one accumulator add per output + the SRAM weight fetches."""
+    wpl = 64 // weight_bits
+    return fan_out * (ENERGY_PJ["add_i32"] + ENERGY_PJ["sram_64b"] / wpl)
+
+
+def measured_energy_pj(
+    layer_sizes: Sequence[int],
+    num_steps: int,
+    events_per_layer: Array,  # (n_layers,) or (n_layers, B) measured counts
+    *,
+    weight_bits: int = 16,
+    neuron_kind: str = "lif",
+) -> Array:
+    """jnp mirror of ``core.energy.snn_ops_from_events(...).energy_pj()``.
+
+    ``OpCount`` calls ``float()`` on its tallies and cannot trace; this
+    computes the identical pJ total from traced event counts so the
+    measured energy can be logged inside a jitted train step
+    (equality with the OpCount path is unit-tested).
+    """
+    ev = jnp.asarray(events_per_layer, jnp.float32)
+    total = jnp.zeros(ev.shape[1:], jnp.float32)
+    wpl = 64 // weight_bits
+    for i, (fan_in, fan_out) in enumerate(
+        zip(layer_sizes[:-1], layer_sizes[1:])
+    ):
+        total = total + ev[i] * fan_out * ENERGY_PJ["add_i32"]
+        fixed = num_steps * fan_out * (
+            ENERGY_PJ["add_i32"]  # bias add
+            + (ENERGY_PJ["mul_i16"] if neuron_kind == "lif" else 0.0)
+            + ENERGY_PJ["add_i16"]
+            + ENERGY_PJ["cmp_i16"]
+        )
+        total = total + fixed
+        total = total + ev[i] * fan_out / wpl * ENERGY_PJ["sram_64b"]
+    total = total + ev[0] / 2.0 * ENERGY_PJ["sram_64b"]
+    return total
+
+
+def energy_regularizer_nj(
+    layer_sizes: Sequence[int],
+    act: Array,  # (n_layers,) differentiable mean spikes per layer output
+    *,
+    weight_bits: int = 16,
+) -> Array:
+    """Differentiable downstream-event energy (nJ per inference).
+
+    ``act[i]`` spikes emitted by layer i each land on layer i+1 and cost
+    ``event_cost_pj(fan_out_{i+1})``; the last layer's spikes leave the
+    chip and are priced free.  Input-layer events are data, carry no
+    gradient, and are excluded (they are still in the *measured* metric).
+    """
+    total = jnp.zeros((), jnp.float32)
+    fan_outs = list(layer_sizes[1:])
+    for i in range(len(fan_outs) - 1):
+        total = total + act[i] * event_cost_pj(
+            fan_outs[i + 1], weight_bits=weight_bits
+        )
+    return total / 1e3  # pJ -> nJ keeps the loss term O(1)
+
+
+def event_loss_fn(
+    params,
+    spikes: Array,  # (T, B, K)
+    labels: Array,  # (B,)
+    cfg: snn.SNNConfig,
+    *,
+    energy_lambda: float = 0.0,
+    train: bool = True,
+    dropout_key: Optional[jax.Array] = None,
+    capacity: Optional[int] = None,
+    use_kernel: bool = False,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Event-driven analog of ``core.snn.loss_fn`` + energy objective.
+
+    With ``energy_lambda == 0`` the scalar loss (and therefore its
+    gradient) matches the dense ``snn.loss_fn`` to float tolerance — the
+    subsystem's gradient-parity anchor.
+    """
+    out_mem, out_spikes, events, act = event_layer.event_bptt_forward(
+        params,
+        spikes,
+        cfg,
+        train=train,
+        dropout_key=dropout_key,
+        capacity=capacity,
+        use_kernel=use_kernel,
+    )
+    # same CE-over-all-steps and prediction rule as the dense trainer —
+    # shared helpers keep the gradient-parity anchor bit-identical
+    task_loss = snn.membrane_ce_loss(out_mem, labels)
+
+    energy_nj = energy_regularizer_nj(cfg.layer_sizes, act)
+    loss = task_loss + energy_lambda * energy_nj
+
+    pred = snn.predict_from_traces(out_mem, out_spikes)
+    acc = jnp.mean((pred == labels).astype(jnp.float32))
+
+    ev_mean = jnp.mean(events, axis=-1)  # (n_layers,) per-inference
+    metrics: Dict[str, Array] = {
+        "task_loss": task_loss,
+        "energy_reg_nj": energy_nj,
+        "accuracy": acc,
+        "spike_rate": jnp.mean(out_spikes),
+        "hidden_rate": act[0] / (cfg.num_steps * cfg.layer_sizes[1]),
+        "energy_pj": measured_energy_pj(
+            cfg.layer_sizes, cfg.num_steps, ev_mean,
+            neuron_kind=cfg.neuron_kind,
+        ),
+    }
+    for i in range(events.shape[0]):
+        metrics[f"events_l{i}"] = ev_mean[i]
+    return loss, metrics

@@ -174,6 +174,79 @@ def test_aer_kernel_property(k, n, e, seed):
     np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
 
 
+# ---------------------------------------------------------- batched kernel
+def test_aer_batched_matches_per_stream_oracle():
+    """Batched kernel == per-stream oracle, including an empty stream
+    (all padding) and a full-capacity stream (every slot a valid event)."""
+    B, K, N, E = 5, 96, 40, 48
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16))
+    addrs = RNG.integers(0, K, (B, E)).astype(np.int32)
+    values = RNG.integers(-1, 2, (B, E)).astype(np.int32)
+    values[0] = 0  # empty stream: gate must skip every E block
+    values[1] = 1  # full capacity: all E slots valid
+    out = ops.aer_spike_matmul_batched(
+        jnp.asarray(addrs), jnp.asarray(values), wq
+    )
+    assert out.dtype == jnp.int32
+    for b in range(B):
+        exp = ref.aer_spike_matmul_ref(
+            jnp.asarray(addrs[b]), jnp.asarray(values[b]), wq
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out[b]), np.asarray(exp), err_msg=f"stream {b}"
+        )
+    assert not np.asarray(out[0]).any()
+
+
+def test_aer_batched_vmap_parity_with_single_stream():
+    """Batched launch == vmap semantics of the single-stream contract."""
+    B, K, N, E = 3, 70, 30, 33  # non-aligned shapes exercise padding
+    wq = jnp.asarray(RNG.integers(-(2**15), 2**15, (K, N)).astype(np.int16))
+    addrs = jnp.asarray(RNG.integers(0, K, (B, E)).astype(np.int32))
+    values = jnp.asarray(RNG.integers(-1, 2, (B, E)).astype(np.int32))
+    out = ops.aer_spike_matmul_batched(addrs, values, wq)
+    exp = jax.vmap(ref.aer_spike_matmul_ref, in_axes=(0, 0, None))(
+        addrs, values, wq
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    singles = jnp.stack(
+        [ops.aer_spike_matmul(addrs[b], values[b], wq) for b in range(B)]
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(singles))
+
+
+def test_aer_batched_float_weights_matches_gather():
+    """float32 weights: the surrogate-training forward path.  Values
+    include magnitudes < 1 (e.g. dropout-scaled spikes) — the block gate
+    must count them as events, not truncate them to zero."""
+    B, K, N, E = 4, 64, 24, 40
+    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32))
+    addrs = jnp.asarray(RNG.integers(0, K, (B, E)).astype(np.int32))
+    values = RNG.integers(-1, 2, (B, E)).astype(np.float32)
+    values[1] *= 0.5  # sub-unit magnitudes must survive the event gate
+    values = jnp.asarray(values)
+    out = ops.aer_spike_matmul_batched(addrs, values, w)
+    assert out.dtype == jnp.float32
+    exp = jnp.einsum("be,ben->bn", values, jnp.take(w, addrs, axis=0))
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_dense_to_aer_capacity_headroom():
+    """capacity > T*N (headroom for merges) pads canonically."""
+    T, N = 4, 10
+    spikes = _rand_spikes(T, 2, N, 0.3)
+    cap = 3 * T * N
+    stream = aer.dense_to_aer(spikes, capacity=cap)
+    assert stream.capacity == cap
+    back = aer.aer_to_dense(stream, T, N)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(spikes))
+    c = int(stream.count[0])
+    assert np.all(np.asarray(stream.times[0, c:]) == T)
+    assert np.all(np.asarray(stream.polarity[0, c:]) == 0)
+
+
 # ----------------------------------------------------------------- runtime
 @pytest.mark.parametrize("rate", [0.0, 0.1, 0.5, 1.0])
 def test_event_forward_matches_dense(rate):
