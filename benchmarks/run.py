@@ -3,13 +3,17 @@
 
   PYTHONPATH=src python -m benchmarks.run           # all tables (reduced)
   PYTHONPATH=src python -m benchmarks.run table2    # one table
+  PYTHONPATH=src python -m benchmarks.run --quick   # quick snn hot-path
+                                                    # bench -> BENCH_snn.json
 
 Tables map 1:1 to the paper (see DESIGN.md §8):
   table1 -> LIF vs Lapicque accuracy x image size
   table2 -> SNN vs BCNN energy efficiency (GOPS/W analog)
   table3 -> neuron-unit micro-costs
   table4 -> network-level end-to-end inference
-Plus `roofline` (beyond paper): the 40-cell dry-run roofline table.
+Plus `roofline` (beyond paper): the 40-cell dry-run roofline table, and
+`snn`: the canonical event-driven chunk benchmark that emits
+``BENCH_snn.json`` at the repo root (fused vs PR-2 baseline trajectory).
 """
 
 from __future__ import annotations
@@ -20,9 +24,15 @@ from benchmarks.common import header
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {
-        "table1", "table2", "table3", "table4", "kernels",
-    }
+    argv = sys.argv[1:]
+    quick = "--quick" in argv
+    which = {a for a in argv if not a.startswith("-")}
+    if not which:
+        which = (
+            {"snn"}
+            if quick
+            else {"table1", "table2", "table3", "table4", "kernels", "snn"}
+        )
     header()
     if "table1" in which:
         from benchmarks import table1_accuracy
@@ -56,6 +66,10 @@ def main() -> None:
         from benchmarks import sparse_train_bench
 
         sparse_train_bench.run()
+    if "snn" in which:
+        from benchmarks import snn_bench
+
+        snn_bench.run(quick=quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,280 @@
+"""Canonical SNN hot-path benchmark -> ``BENCH_snn.json`` at the repo root.
+
+Tracks the perf trajectory of the event-driven chunk path across PRs on
+the paper's own 4096-512-2 collision config.  Three paths, same inputs,
+same run:
+
+  - ``baseline_pr2_jnp``: faithful replica of the PR-2 hot loop —
+    per-chunk requant of the full weight set, O(K log K) argsort event
+    compaction, full fan-in event capacity.
+  - ``overhauled_jnp``: this PR's jnp path — params prepared once, O(K)
+    cumsum-scatter ``step_events``, capacities autotuned (lossless
+    p100 * safety) from measured spike counts.
+  - ``fused``: the single-invocation Pallas chunk kernel
+    (``kernels.snn_chunk``) — Mosaic on TPU, interpret on CPU (recorded
+    with its ``pallas_mode`` so numbers are never compared across modes
+    silently).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.snn_bench [--quick] [--json PATH]
+  PYTHONPATH=src python -m benchmarks.snn_bench --validate BENCH_snn.json
+  PYTHONPATH=src python -m benchmarks.run --quick       # same, via run.py
+
+CI runs ``--quick`` and then ``--validate`` — a malformed artifact fails
+the job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import coding, neuron, snn
+from repro.events import capacity as cap_mod
+from repro.events import runtime
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_JSON = REPO_ROOT / "BENCH_snn.json"
+SCHEMA = "bench_snn/v1"
+
+REQUIRED_TOP = ("schema", "backend", "mode", "config", "capacity_plan",
+                "paths", "step_events_us", "speedup")
+REQUIRED_PATHS = ("baseline_pr2_jnp", "overhauled_jnp", "fused")
+REQUIRED_PATH_KEYS = ("us_per_chunk", "steps_per_s", "events_per_s")
+REQUIRED_SPEEDUP = (
+    "fused_vs_baseline_steps_per_s",
+    "overhauled_jnp_vs_baseline_steps_per_s",
+    "selected_vs_baseline_steps_per_s",
+)
+
+
+def _baseline_chunk(params, states, spikes, cfg: snn.SNNConfig):
+    """PR-2 hot-path replica (pre-overhaul ``run_chunk``): requantizes the
+    full weight set inside the traced chunk, extracts events by stable
+    argsort at full fan-in capacity."""
+    ncfg = cfg.neuron_cfg
+    p = runtime.prepare_params(params, cfg)  # re-traced into every chunk
+
+    def step(st, x_t):
+        new, ev = [], []
+        h = x_t
+        for i in range(cfg.num_layers):
+            lp = p[f"layer{i}"]
+            a, v, c = runtime.step_events_argsort(h, cfg.layer_sizes[i])
+            cur = runtime.gather_current(lp["w"], lp["b"], a, v)
+            s2, spk = neuron.neuron_step(
+                ncfg, st[i], cur,
+                beta=snn.effective_beta(lp), threshold=lp["threshold"],
+            )
+            new.append(s2)
+            ev.append(c.astype(jnp.float32))
+            h = spk
+        return tuple(new), (new[-1].u, h, jnp.stack(ev))
+
+    fin, (m, s, e) = jax.lax.scan(step, tuple(states), spikes)
+    return list(fin), m, s, e
+
+
+def _path_stats(us_per_chunk: float, chunk_steps: int, batch: int,
+                events_per_chunk: float, **extra) -> Dict:
+    sec = us_per_chunk * 1e-6
+    return {
+        "us_per_chunk": us_per_chunk,
+        # network time-steps advanced per second across the micro-batch
+        "steps_per_s": chunk_steps * batch / sec,
+        "events_per_s": events_per_chunk / sec,
+        **extra,
+    }
+
+
+def run(quick: bool = False, json_path: Optional[Path] = None) -> Dict:
+    from repro.configs.collision_snn import CONFIG as cfg
+    from repro.kernels import ops
+
+    json_path = Path(json_path) if json_path else DEFAULT_JSON
+    on_tpu = ops.on_tpu()
+    B = 4 if quick else 8
+    Tc = 5
+    warm, iters = (1, 3) if quick else (2, 5)
+    K = cfg.layer_sizes[0]
+
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (B, K)) * 0.4
+    spikes_full = coding.rate_encode(
+        jax.random.PRNGKey(2), imgs, cfg.num_steps
+    )  # (T, B, K), ~0.2 mean rate — the paper's rate-coded regime
+    chunk = spikes_full[:Tc]
+    states = runtime.init_states(cfg, B)
+    rate = float(chunk.mean())
+
+    # lossless capacity plan measured on the full window
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    plan = cap_mod.autotune(
+        params, cfg, spikes_full,
+        percentile=100.0, safety=1.2, align=128,
+    )
+    prepared = runtime.prepare_params(params, cfg)
+
+    # measured events of one chunk (identical for all paths by parity)
+    _, _, _, ev = runtime.run_chunk(params, states, chunk, cfg)
+    events_per_chunk = float(np.asarray(ev).sum())
+
+    base_j = jax.jit(lambda st, sp: _baseline_chunk(params, st, sp, cfg))
+    over_j = jax.jit(
+        lambda st, sp: runtime.run_chunk(
+            prepared, st, sp, cfg,
+            prepared=True, capacities=plan.capacities, backend="jnp",
+        )
+    )
+    fused_j = jax.jit(
+        lambda st, sp: runtime.run_chunk(
+            prepared, st, sp, cfg,
+            prepared=True, capacities=plan.capacities, backend="fused",
+        )
+    )
+
+    t_base = time_fn(base_j, states, chunk, warmup=warm, iters=iters)
+    t_over = time_fn(over_j, states, chunk, warmup=warm, iters=iters)
+    t_fused = time_fn(fused_j, states, chunk, warmup=warm, iters=iters)
+
+    # event-extraction microbenchmark: the O(K log K) -> O(K) rewrite
+    plane = chunk[0]
+    t_argsort = time_fn(
+        jax.jit(lambda x: runtime.step_events_argsort(x, K)),
+        plane, warmup=warm, iters=iters,
+    )
+    t_cumsum = time_fn(
+        jax.jit(lambda x: runtime.step_events(x, K)),
+        plane, warmup=warm, iters=iters,
+    )
+
+    paths = {
+        "baseline_pr2_jnp": _path_stats(
+            t_base, Tc, B, events_per_chunk,
+            detail="argsort events, full fan-in capacity, requant/chunk",
+        ),
+        "overhauled_jnp": _path_stats(
+            t_over, Tc, B, events_per_chunk,
+            detail="O(K) step_events, autotuned capacity, prepared params",
+        ),
+        "fused": _path_stats(
+            t_fused, Tc, B, events_per_chunk,
+            pallas_mode="mosaic" if on_tpu else "interpret",
+            detail="kernels.snn_chunk single-invocation chunk",
+        ),
+    }
+    # the path backend="auto" actually selects on this host
+    selected = "fused" if on_tpu else "overhauled_jnp"
+    result = {
+        "schema": SCHEMA,
+        "backend": jax.default_backend(),
+        "mode": "quick" if quick else "full",
+        "config": {
+            "layer_sizes": list(cfg.layer_sizes),
+            "num_steps": cfg.num_steps,
+            "chunk_steps": Tc,
+            "batch": B,
+            "measured_input_rate": rate,
+            "quant_q115": cfg.quant_q115,
+            "events_per_chunk": events_per_chunk,
+        },
+        "capacity_plan": plan.as_dict(),
+        "paths": paths,
+        "step_events_us": {"argsort": t_argsort, "cumsum_scatter": t_cumsum},
+        "speedup": {
+            "fused_vs_baseline_steps_per_s": (
+                paths["fused"]["steps_per_s"]
+                / paths["baseline_pr2_jnp"]["steps_per_s"]
+            ),
+            "overhauled_jnp_vs_baseline_steps_per_s": (
+                paths["overhauled_jnp"]["steps_per_s"]
+                / paths["baseline_pr2_jnp"]["steps_per_s"]
+            ),
+            "selected_path": selected,
+            "selected_vs_baseline_steps_per_s": (
+                paths[selected]["steps_per_s"]
+                / paths["baseline_pr2_jnp"]["steps_per_s"]
+            ),
+        },
+    }
+    json_path.write_text(json.dumps(result, indent=2) + "\n")
+
+    for name, st in paths.items():
+        emit(
+            f"snn_bench/{name}", st["us_per_chunk"],
+            f"steps_per_s={st['steps_per_s']:.1f};"
+            f"events_per_s={st['events_per_s']:.0f}",
+        )
+    emit(
+        "snn_bench/speedup_selected_vs_baseline",
+        0.0,
+        f"{result['speedup']['selected_vs_baseline_steps_per_s']:.2f}x;"
+        f"json={json_path}",
+    )
+    return result
+
+
+def validate(path: Path) -> List[str]:
+    """Structural validation of a BENCH_snn.json; returns error strings."""
+    errors: List[str] = []
+    try:
+        doc = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable JSON: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    for k in REQUIRED_TOP:
+        if k not in doc:
+            errors.append(f"missing top-level key {k!r}")
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema {doc.get('schema')!r} != {SCHEMA!r}")
+    paths = doc.get("paths", {})
+    for p in REQUIRED_PATHS:
+        if p not in paths:
+            errors.append(f"missing path {p!r}")
+            continue
+        for k in REQUIRED_PATH_KEYS:
+            v = paths[p].get(k)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errors.append(f"paths.{p}.{k} not a positive number: {v!r}")
+    speedup = doc.get("speedup", {})
+    for k in REQUIRED_SPEEDUP:
+        v = speedup.get(k)
+        if not isinstance(v, (int, float)) or not v > 0:
+            errors.append(f"speedup.{k} not a positive number: {v!r}")
+    caps = doc.get("capacity_plan", {}).get("capacities")
+    if not (isinstance(caps, list) and caps
+            and all(isinstance(c, int) and c >= 1 for c in caps)):
+        errors.append(f"capacity_plan.capacities malformed: {caps!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", type=Path, default=None)
+    ap.add_argument("--validate", type=Path, default=None,
+                    help="validate an existing BENCH_snn.json and exit")
+    args = ap.parse_args(argv)
+    if args.validate is not None:
+        errors = validate(args.validate)
+        if errors:
+            for e in errors:
+                print(f"BENCH_snn.json INVALID: {e}", file=sys.stderr)
+            return 1
+        print(f"{args.validate}: OK")
+        return 0
+    run(quick=args.quick, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,9 +9,12 @@ package makes that dataflow real instead of analytic:
 - ``runtime``: event-driven SNN forward (gathers only active weight rows)
                that matches ``core.snn.forward`` to float tolerance and
                reports *measured* per-layer event counts for the energy
-               model.
+               model; dispatches to the fused Pallas chunk kernel
+               (``kernels.snn_chunk``) via ``backend=``.
+- ``capacity``: event-list capacity autotuning from measured spike-count
+               percentiles, with a truncation/accuracy trade-off report.
 """
 
-from repro.events import aer, runtime
+from repro.events import aer, capacity, runtime
 
-__all__ = ["aer", "runtime"]
+__all__ = ["aer", "capacity", "runtime"]

@@ -23,7 +23,9 @@ serving engine can carry membrane potentials across request chunks.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +46,46 @@ def step_events(x: Array, capacity: int) -> Tuple[Array, Array, Array]:
 
     Returns (addrs (..., C) int32, values (..., C) float32, count (...,)
     int32); ``values`` carries the (signed) spike magnitude, 0 on padding.
+
+    O(K + C log K) cumsum-based stable compaction (vs the original
+    O(K log K) argsort, kept as ``step_events_argsort`` for oracle and
+    baseline-benchmark use): a running count over the plane assigns each
+    active position its output slot (its cumsum rank), and because that
+    rank sequence is monotone the *inverse* map — which source position
+    feeds output slot c — is a vectorized binary search, i.e. a gather.
+    Expressing the compaction as a gather instead of the literal
+    rank-scatter matters: XLA lowers generic scatters poorly on CPU (and
+    serializes them on TPU), while searchsorted + take_along_axis stay
+    vectorized on both; measured ~15-25x faster than either the scatter
+    or the argsort at the collision config (benchmarks/snn_bench.py).
+    At ``capacity`` the list truncates to the *first* ``capacity`` active
+    positions — identical truncation semantics to the argsort path
+    (property-tested).
+    """
+    K = x.shape[-1]
+    lead = x.shape[:-1]
+    active = x != 0
+    pos = jnp.cumsum(active.astype(jnp.int32), axis=-1)  # 1-indexed rank
+    count = jnp.minimum(pos[..., -1], capacity).astype(jnp.int32)
+    R = int(np.prod(lead)) if lead else 1
+    # src[c] = first position whose rank reaches c+1 (stable: ascending
+    # address order), found by binary search over the monotone ranks
+    targets = jnp.arange(1, capacity + 1, dtype=jnp.int32)
+    src = jax.vmap(
+        lambda p: jnp.searchsorted(p, targets, side="left")
+    )(pos.reshape(R, K))
+    src = jnp.minimum(src, K - 1).astype(jnp.int32).reshape(*lead, capacity)
+    valid = jnp.arange(capacity, dtype=jnp.int32) < count[..., None]
+    addrs = jnp.where(valid, src, 0)
+    values = jnp.where(valid, jnp.take_along_axis(x, src, axis=-1), 0.0)
+    return addrs, values.astype(jnp.float32), count
+
+
+def step_events_argsort(x: Array, capacity: int) -> Tuple[Array, Array, Array]:
+    """Original argsort-compaction event extraction (O(K log K)).
+
+    Kept as the oracle for ``step_events`` and as the PR-2 baseline in
+    ``benchmarks/snn_bench.py``; the O(K) scatter above is the hot path.
     """
     active = x != 0
     order = jnp.argsort(~active, axis=-1, stable=True)[..., :capacity]
@@ -99,7 +141,14 @@ def init_states(cfg: snn.SNNConfig, batch: int) -> List[neuron.NeuronState]:
     ]
 
 
-def _maybe_quant(params, cfg: snn.SNNConfig):
+def prepare_params(params, cfg: snn.SNNConfig):
+    """One-time parameter preparation for the chunk runtime.
+
+    Applies the config's Q1.15 fake-quantization (a no-op otherwise).  Do
+    this once at engine/trainer init and pass ``prepared=True`` to
+    ``run_chunk`` — the original hot loop re-quantized the full weight set
+    on every chunk execution.
+    """
     if not cfg.quant_q115:
         return params
     return {
@@ -112,6 +161,10 @@ def _maybe_quant(params, cfg: snn.SNNConfig):
     }
 
 
+# backward-compatible alias (pre-overhaul name)
+_maybe_quant = prepare_params
+
+
 def run_chunk(
     params: Dict[str, Dict[str, Array]],
     states: List[neuron.NeuronState],
@@ -119,6 +172,10 @@ def run_chunk(
     cfg: snn.SNNConfig,
     *,
     active: Optional[Array] = None,  # (B,) mask; inactive rows are frozen
+    capacities: Optional[Sequence[int]] = None,  # per-layer event caps
+    prepared: bool = False,  # params already through prepare_params
+    backend: str = "jnp",  # "jnp" | "fused" | "auto"
+    interpret: Optional[bool] = None,  # fused path: force interpret mode
 ) -> Tuple[List[neuron.NeuronState], Array, Array, Array]:
     """Advance the network ``Tc`` steps event-drivenly.
 
@@ -130,9 +187,20 @@ def run_chunk(
     ``active`` freezes finished batch slots: their inputs are silenced and
     their membrane state is held, so one compiled chunk serves a partially
     filled micro-batch (continuous batching).
+
+    ``capacities`` bounds each layer's per-step event list (default: full
+    fan-in, no truncation).  Tuned capacities (``events.capacity``) shrink
+    the gather loop to the measured activity envelope.
+
+    ``backend`` selects the hot path: ``"jnp"`` is the scan-of-gathers
+    oracle, ``"fused"`` the single-invocation Pallas chunk kernel
+    (``kernels.snn_chunk``), and ``"auto"`` picks fused on TPU and jnp on
+    CPU (where the fused kernel would run interpreted).  The fused path
+    applies ``capacities[0]`` to the input event list; hidden layers run
+    as gated in-VMEM matvecs and never truncate.
     """
     ncfg = cfg.neuron_cfg
-    p = _maybe_quant(params, cfg)
+    p = params if prepared else prepare_params(params, cfg)
     n_layers = cfg.num_layers
     B = spikes.shape[1]
     act = (
@@ -140,13 +208,23 @@ def run_chunk(
         if active is None
         else active.astype(jnp.float32)
     )
+    caps = _resolve_capacities(cfg, capacities)
+
+    if backend == "auto":
+        from repro.kernels import ops as _ops
+
+        backend = "fused" if _ops.on_tpu() else "jnp"
+    if backend == "fused":
+        return _run_chunk_fused(p, states, spikes, cfg, act, caps, interpret)
+    if backend != "jnp":
+        raise ValueError(f"unknown run_chunk backend {backend!r}")
 
     def step(states, x_t):
         new_states, ev_t = [], []
         h = x_t * act[:, None]
         for i in range(n_layers):
             lp = p[f"layer{i}"]
-            addrs, values, count = step_events(h, cfg.layer_sizes[i])
+            addrs, values, count = step_events(h, caps[i])
             cur = gather_current(lp["w"], lp["b"], addrs, values)
             st, spk = neuron.neuron_step(
                 ncfg,
@@ -175,6 +253,73 @@ def run_chunk(
     return list(fin_states), out_mem, out_spikes, events
 
 
+def _resolve_capacities(
+    cfg: snn.SNNConfig, capacities: Optional[Sequence[int]]
+) -> List[int]:
+    if capacities is None:
+        return [int(cfg.layer_sizes[i]) for i in range(cfg.num_layers)]
+    caps = [int(c) for c in capacities]
+    if len(caps) != cfg.num_layers:
+        raise ValueError(
+            f"capacities has {len(caps)} entries for {cfg.num_layers} layers"
+        )
+    if any(c < 1 for c in caps):
+        raise ValueError(f"capacities must be >= 1, got {caps}")
+    return caps
+
+
+def _run_chunk_fused(
+    p, states, spikes, cfg: snn.SNNConfig, act, caps, interpret
+):
+    """Dispatch one chunk to the fused Pallas kernel.
+
+    Event extraction (the new O(K) ``step_events``) happens here; the
+    kernel consumes packed valid-first event tables via scalar prefetch.
+    """
+    from repro.kernels import ops
+
+    ncfg = cfg.neuron_cfg
+    L = cfg.num_layers
+    # the fused kernel truncates only the input event list (capacities[0]);
+    # hidden layers run as dense in-VMEM matvecs.  A truncating hidden
+    # capacity would make fused and jnp return different outputs for the
+    # same arguments — and backend="auto" platform-dependent — so reject
+    # it loudly instead of diverging silently.
+    for i in range(1, L):
+        if caps[i] < cfg.layer_sizes[i]:
+            raise ValueError(
+                f"backend='fused' cannot truncate hidden layers: "
+                f"capacities[{i}]={caps[i]} < fan-in {cfg.layer_sizes[i]}. "
+                f"Use full fan-in hidden capacities (autotune(..., "
+                f"tune_hidden=False)) or backend='jnp'."
+            )
+    # silence frozen slots before extraction so their (ignored) event
+    # tables cost nothing downstream and counts match the jnp path
+    addrs, values, counts = step_events(spikes * act[None, :, None], caps[0])
+    layers = [p[f"layer{i}"] for i in range(L)]
+    mem, spk, events, u_fin, r_fin = ops.snn_chunk(
+        tuple(lp["w"] for lp in layers),
+        tuple(lp["b"] for lp in layers),
+        tuple(snn.effective_beta(lp) for lp in layers),
+        tuple(lp["threshold"] for lp in layers),
+        tuple(st.u for st in states),
+        tuple(st.refrac for st in states),
+        addrs,
+        values,
+        counts,
+        act,
+        refractory_steps=ncfg.refractory_steps,
+        reset=ncfg.reset,
+        kind=ncfg.kind,
+        lapicque_gain=ncfg.lapicque_gain,
+        interpret=interpret,
+    )
+    new_states = [
+        neuron.NeuronState(u=u, refrac=r) for u, r in zip(u_fin, r_fin)
+    ]
+    return new_states, mem, spk, events
+
+
 # --------------------------------------------------------------------------
 # Whole-window forward passes
 # --------------------------------------------------------------------------
@@ -184,6 +329,10 @@ def event_forward(
     params: Dict[str, Dict[str, Array]],
     spikes: Array,  # (T, B, K) in {0,1}
     cfg: snn.SNNConfig,
+    *,
+    capacities: Optional[Sequence[int]] = None,
+    prepared: bool = False,
+    backend: str = "jnp",
 ) -> Tuple[Array, Array, Array]:
     """Event-driven analog of ``core.snn.forward`` (inference mode).
 
@@ -192,7 +341,15 @@ def event_forward(
     the *measured* per-layer input-event counts of this window.
     """
     states = init_states(cfg, spikes.shape[1])
-    _, out_mem, out_spikes, events = run_chunk(params, states, spikes, cfg)
+    _, out_mem, out_spikes, events = run_chunk(
+        params,
+        states,
+        spikes,
+        cfg,
+        capacities=capacities,
+        prepared=prepared,
+        backend=backend,
+    )
     return out_mem, out_spikes, jnp.sum(events, axis=0)
 
 
@@ -212,7 +369,7 @@ def event_forward_aer(
     """
     T = num_steps if num_steps is not None else cfg.num_steps
     ncfg = cfg.neuron_cfg
-    p = _maybe_quant(params, cfg)
+    p = prepare_params(params, cfg)
     n_layers = cfg.num_layers
     B, E = stream.times.shape
 

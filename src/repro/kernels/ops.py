@@ -22,6 +22,7 @@ from repro.core import quant
 from repro.kernels import aer_matmul as _aer
 from repro.kernels import lif_fused as _lif
 from repro.kernels import q115_matmul as _q115
+from repro.kernels import snn_chunk as _chunk
 from repro.kernels import spike_matmul as _smm
 
 Array = jax.Array
@@ -76,6 +77,51 @@ def aer_spike_matmul_batched(
     """
     return _aer.aer_spike_matmul_batched(addrs, values, weights,
                                          interpret=not on_tpu())
+
+
+def snn_chunk(
+    weights,
+    biases,
+    betas,
+    thresholds,
+    u0,
+    r0,
+    addrs: Array,
+    values: Array,
+    counts: Array,
+    active: Array,
+    *,
+    refractory_steps: int = 0,
+    reset: str = "zero",
+    kind: str = "lif",
+    lapicque_gain: float = 1.0,
+    interpret=None,
+):
+    """Fused multi-timestep, multi-layer event-driven SNN chunk.
+
+    One Pallas invocation advances the whole network ``Tc`` steps: layer-0
+    weight-row gathers driven by scalar-prefetched event lists (gated per
+    E-block on a non-silent predicate), membranes + refractory counters
+    resident in VMEM scratch across all steps, hidden layers as gated
+    in-VMEM matvecs.  See ``kernels.snn_chunk`` for the full contract.
+    """
+    return _chunk.snn_chunk(
+        weights,
+        biases,
+        betas,
+        thresholds,
+        u0,
+        r0,
+        addrs,
+        values,
+        counts,
+        active,
+        refractory_steps=refractory_steps,
+        reset=reset,
+        kind=kind,
+        lapicque_gain=lapicque_gain,
+        interpret=(not on_tpu()) if interpret is None else interpret,
+    )
 
 
 def q115_matmul(x_q: Array, w_q: Array, *, saturate: bool = True) -> Array:

@@ -1,0 +1,366 @@
+"""Fused event-driven SNN chunk — one Pallas invocation per Tc-step chunk.
+
+This is the TPU analog of the paper's whole §4.3 pipeline, not just one
+stage of it: on the FPGA the event decoder, cascaded adder and LIF neuron
+unit are a single circuit and the membrane register never leaves the chip.
+The pre-existing kernels each captured half of that — ``aer_spike_matmul``
+fused the event gather, ``lif_fused`` fused the membrane update — but the
+chunk runtime still stitched them together through HBM: per-step currents
+written out by the gather, read back by the LIF pass, and membrane state
+round-tripped between every step.  This kernel closes the loop:
+
+  - **per-step event lists ride in via scalar prefetch** (SMEM): the whole
+    (B, Tc, C) address/value/count table is available before the body runs,
+    so event addresses can drive dynamic weight-row indexing;
+  - **membrane potential and refractory counters live in VMEM scratch for
+    all Tc steps** — HBM traffic for state is exactly one read of the
+    incoming (B, N) slot states and one write of the outgoing ones,
+    versus 2*Tc round-trips for the split pipeline;
+  - **each E-block's weight-row gathers are gated on a non-silent
+    predicate**: event lists are packed valid-first (``runtime.
+    step_events``), so a block is silent iff its base offset is past the
+    prefetched event count — silent stretches of the capacity cost one
+    scalar compare each, and no weight rows are touched (the ROADMAP's
+    "gate the weight DMA per E-block" item: on TPU the gather from the
+    VMEM-resident slab, and the DMA it implies on spill, simply never
+    issues);
+  - **hidden layers run as gated in-VMEM matvecs**: the hidden spike plane
+    is already resident (it was just computed), so event-extracting it
+    would cost more than the (N_hid, N_out) product it feeds — a whole-
+    plane non-silent predicate skips even that when the layer is quiet.
+    For the paper's 4096-512-2 network >99% of synaptic work is in layer
+    0, which takes the gathered path.
+
+Semantics are anchored against ``events.runtime.run_chunk`` (the jnp
+oracle): frozen continuous-batching slots, refractory counters, zero and
+subtract reset, LIF and Lapicque dynamics, Q1.15 fake-quantized weights,
+and measured per-layer event counts all match to float32 tolerance
+(tests/test_snn_chunk.py).  On CPU the same kernel runs in interpret mode.
+
+Grid: (B,) — one program per batch slot; weights are broadcast blocks
+(index map constant in b) so each layer's slab is resident once, and slot
+programs are embarrassingly parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+Array = jax.Array
+
+_LANE = 128  # TPU lane width: last-dim padding quantum
+_EV_PAD = 128  # padded event-count lane (supports up to 128 layers)
+# padded neurons get a huge-but-finite threshold: never fires, and unlike
+# +inf it cannot make `thr * spike` produce NaN in subtract-reset mode
+_PAD_THRESHOLD = 1e30
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _chunk_kernel(
+    act_ref,  # (B,) int32 prefetch: 1 = slot active, 0 = frozen
+    addr_ref,  # (B, Tc*C) int32 prefetch: layer-0 event addresses
+    val_ref,  # (B, Tc*C) f32 prefetch: signed event values (0 = pad)
+    cnt_ref,  # (B, Tc) int32 prefetch: valid events per step
+    *refs,
+    num_layers: int,
+    num_steps: int,
+    cap: int,
+    block_e: int,
+    refractory_steps: int,
+    reset: str,
+    kind: str,
+    lapicque_gain: float,
+):
+    L = num_layers
+    ws = refs[0:L]  # (K_i, NP_i) weight slabs
+    biases = refs[L : 2 * L]  # (1, NP_i)
+    betas = refs[2 * L : 3 * L]
+    thrs = refs[3 * L : 4 * L]
+    u0s = refs[4 * L : 5 * L]  # (1, NP_i) incoming slot state
+    r0s = refs[5 * L : 6 * L]  # (1, NP_i) int32
+    mem_ref, spk_ref, ev_ref = refs[6 * L : 6 * L + 3]
+    ufins = refs[6 * L + 3 : 7 * L + 3]
+    rfins = refs[7 * L + 3 : 8 * L + 3]
+    u_scr = refs[8 * L + 3 : 9 * L + 3]  # VMEM-resident membranes
+    r_scr = refs[9 * L + 3 : 10 * L + 3]  # VMEM-resident refractory
+
+    b = pl.program_id(0)
+    is_active = act_ref[b] > 0
+    ne = cap // block_e
+
+    @pl.when(jnp.logical_not(is_active))
+    def _frozen():
+        # run_chunk semantics for inactive slots: state held, no spikes, no
+        # events, output membrane trace pinned at the held value
+        for i in range(L):
+            ufins[i][...] = u0s[i][...]
+            rfins[i][...] = r0s[i][...]
+        mem_ref[...] = jnp.broadcast_to(
+            u0s[L - 1][...][None], mem_ref.shape
+        )
+        spk_ref[...] = jnp.zeros_like(spk_ref)
+        ev_ref[...] = jnp.zeros_like(ev_ref)
+
+    @pl.when(is_active)
+    def _run():
+        for i in range(L):
+            u_scr[i][...] = u0s[i][...]
+            r_scr[i][...] = r0s[i][...]
+
+        lane = jax.lax.broadcasted_iota(jnp.int32, (1, _EV_PAD), 1)
+
+        def step(t, _):
+            # ---- layer 0: gated event-driven synaptic integration
+            n0 = cnt_ref[b, t]
+            base0 = t * cap
+
+            def eblock(eb, acc):
+                base = base0 + eb * block_e
+
+                def gather(i, a):
+                    addr = addr_ref[b, base + i]
+                    v = val_ref[b, base + i]
+                    row = ws[0][pl.ds(addr, 1), :].astype(jnp.float32)
+                    return a + row * v
+
+                # events are packed valid-first: a block past the count is
+                # pure padding — one scalar compare, no row gathers
+                return jax.lax.cond(
+                    eb * block_e < n0,
+                    lambda a: jax.lax.fori_loop(0, block_e, gather, a),
+                    lambda a: a,
+                    acc,
+                )
+
+            cur = jax.lax.fori_loop(
+                0, ne, eblock, jnp.zeros_like(biases[0][...])
+            )
+            cur = cur + biases[0][...]
+
+            ev_counts = [n0.astype(jnp.float32)]
+            h = None
+            for i in range(L):
+                if i > 0:
+                    # hidden layers: spike plane already VMEM-resident —
+                    # gated dense matvec (skip the product when silent)
+                    hcnt = jnp.sum(h)  # spikes are {0,1}: sum == nnz
+                    ev_counts.append(hcnt)
+                    w_i, b_i = ws[i], biases[i]
+                    cur = jax.lax.cond(
+                        hcnt > 0,
+                        lambda h=h, w_i=w_i, b_i=b_i: (
+                            jnp.dot(
+                                h,
+                                w_i[...],
+                                preferred_element_type=jnp.float32,
+                            )
+                            + b_i[...]
+                        ),
+                        lambda b_i=b_i: b_i[...] + jnp.zeros_like(b_i[...]),
+                    )
+                # ---- LIF / Lapicque membrane update, state in scratch
+                u = u_scr[i][...]
+                if kind == "lif":
+                    u_pre = betas[i][...] * u + cur
+                else:  # lapicque
+                    u_pre = u + lapicque_gain * cur
+                raw = (u_pre >= thrs[i][...]).astype(jnp.float32)
+                if refractory_steps > 0:
+                    can = (r_scr[i][...] <= 0).astype(jnp.float32)
+                    spk = raw * can
+                    r_scr[i][...] = jnp.where(
+                        spk > 0,
+                        jnp.int32(refractory_steps),
+                        jnp.maximum(r_scr[i][...] - 1, 0),
+                    )
+                else:
+                    spk = raw
+                if reset == "zero":
+                    u_scr[i][...] = u_pre * (1.0 - spk)
+                else:  # subtract
+                    u_scr[i][...] = u_pre - thrs[i][...] * spk
+                h = spk
+
+            mem_ref[pl.ds(t, 1)] = u_scr[L - 1][...][None]
+            spk_ref[pl.ds(t, 1)] = h[None]
+            ev_row = jnp.zeros((1, _EV_PAD), jnp.float32)
+            for i in range(L):
+                ev_row = jnp.where(lane == i, ev_counts[i], ev_row)
+            ev_ref[pl.ds(t, 1)] = ev_row[None]
+            return 0
+
+        jax.lax.fori_loop(0, num_steps, step, 0)
+        for i in range(L):
+            ufins[i][...] = u_scr[i][...]
+            rfins[i][...] = r_scr[i][...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "refractory_steps",
+        "reset",
+        "kind",
+        "lapicque_gain",
+        "block_e",
+        "interpret",
+    ),
+)
+def snn_chunk(
+    weights: Sequence[Array],  # L x (K_i, N_i) f32 (fake-quantized ok)
+    biases: Sequence[Array],  # L x (N_i,) f32
+    betas: Sequence[Array],  # L x (N_i,) f32 (effective, post-sigmoid)
+    thresholds: Sequence[Array],  # L x (N_i,) f32
+    u0: Sequence[Array],  # L x (B, N_i) f32 incoming membranes
+    r0: Sequence[Array],  # L x (B, N_i) i32 incoming refractory
+    addrs: Array,  # (Tc, B, C) int32 layer-0 event addresses
+    values: Array,  # (Tc, B, C) f32 signed event values (0 = pad)
+    counts: Array,  # (Tc, B) int32 valid events per step
+    active: Array,  # (B,) slot mask (nonzero = active)
+    *,
+    refractory_steps: int = 0,
+    reset: str = "zero",
+    kind: str = "lif",
+    lapicque_gain: float = 1.0,
+    block_e: int = 128,
+    interpret: bool = False,
+) -> Tuple[Array, Array, Array, Tuple[Array, ...], Tuple[Array, ...]]:
+    """Run the whole SNN ``Tc`` steps in one kernel launch.
+
+    Returns (out_mem (Tc, B, N_last), out_spikes (Tc, B, N_last),
+    events (Tc, L, B), u_fin (L x (B, N_i)), refrac_fin (L x (B, N_i))).
+
+    Event lists must be packed valid-first with zero values on padding —
+    exactly what ``events.runtime.step_events`` produces; the E-block gate
+    relies on it.
+    """
+    L = len(weights)
+    assert L <= _EV_PAD, "event-count lane supports at most 128 layers"
+    Tc, B, C = addrs.shape
+
+    be = min(block_e, C)
+    pc = (-C) % be
+    if pc:
+        addrs = jnp.pad(addrs, ((0, 0), (0, 0), (0, pc)))
+        values = jnp.pad(values, ((0, 0), (0, 0), (0, pc)))
+    Cp = C + pc
+
+    outs = [w.shape[1] for w in weights]
+    np_out = [_round_up(n, _LANE) for n in outs]
+
+    ws, bs, bet, thr, u0p, r0p = [], [], [], [], [], []
+    for i in range(L):
+        pn = np_out[i] - outs[i]
+        w = weights[i].astype(jnp.float32)
+        if i > 0:  # rows must match the padded spike plane of layer i-1
+            w = jnp.pad(w, ((0, np_out[i - 1] - w.shape[0]), (0, pn)))
+        elif pn:
+            w = jnp.pad(w, ((0, 0), (0, pn)))
+        ws.append(w)
+        bs.append(jnp.pad(biases[i].astype(jnp.float32), (0, pn))[None, :])
+        bet.append(jnp.pad(betas[i].astype(jnp.float32), (0, pn))[None, :])
+        thr.append(
+            jnp.pad(
+                thresholds[i].astype(jnp.float32),
+                (0, pn),
+                constant_values=_PAD_THRESHOLD,
+            )[None, :]
+        )
+        u0p.append(jnp.pad(u0[i].astype(jnp.float32), ((0, 0), (0, pn))))
+        r0p.append(jnp.pad(r0[i].astype(jnp.int32), ((0, 0), (0, pn))))
+
+    # prefetch tables: flat per-slot event streams + per-step counts
+    addrs_f = addrs.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.int32)
+    values_f = (
+        values.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.float32)
+    )
+    counts_f = counts.transpose(1, 0).astype(jnp.int32)
+    act = (jnp.asarray(active) != 0).astype(jnp.int32)
+
+    in_specs = []
+    for i in range(L):
+        # index map constant in b: each slab is resident once, shared by
+        # every slot program
+        in_specs.append(
+            pl.BlockSpec(ws[i].shape, lambda b, *_: (0, 0))
+        )
+    for group in (bs, bet, thr):
+        for i in range(L):
+            in_specs.append(
+                pl.BlockSpec((1, np_out[i]), lambda b, *_: (0, 0))
+            )
+    for group in (u0p, r0p):
+        for i in range(L):
+            in_specs.append(
+                pl.BlockSpec((1, np_out[i]), lambda b, *_: (b, 0))
+            )
+
+    npl = np_out[-1]
+    out_specs = [
+        pl.BlockSpec((Tc, 1, npl), lambda b, *_: (0, b, 0)),  # mem
+        pl.BlockSpec((Tc, 1, npl), lambda b, *_: (0, b, 0)),  # spikes
+        pl.BlockSpec((Tc, 1, _EV_PAD), lambda b, *_: (0, b, 0)),  # events
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Tc, B, npl), jnp.float32),
+        jax.ShapeDtypeStruct((Tc, B, npl), jnp.float32),
+        jax.ShapeDtypeStruct((Tc, B, _EV_PAD), jnp.float32),
+    ]
+    for i in range(L):  # final membranes
+        out_specs.append(pl.BlockSpec((1, np_out[i]), lambda b, *_: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, np_out[i]), jnp.float32))
+    for i in range(L):  # final refractory counters
+        out_specs.append(pl.BlockSpec((1, np_out[i]), lambda b, *_: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, np_out[i]), jnp.int32))
+
+    scratch_shapes = [pltpu.VMEM((1, np_out[i]), jnp.float32) for i in range(L)]
+    scratch_shapes += [pltpu.VMEM((1, np_out[i]), jnp.int32) for i in range(L)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch_shapes,
+    )
+    results = pl.pallas_call(
+        functools.partial(
+            _chunk_kernel,
+            num_layers=L,
+            num_steps=Tc,
+            cap=Cp,
+            block_e=be,
+            refractory_steps=refractory_steps,
+            reset=reset,
+            kind=kind,
+            lapicque_gain=lapicque_gain,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(act, addrs_f, values_f, counts_f, *ws, *bs, *bet, *thr, *u0p, *r0p)
+
+    mem, spk, ev = results[0], results[1], results[2]
+    u_fin = tuple(
+        results[3 + i][:, : outs[i]] for i in range(L)
+    )
+    r_fin = tuple(
+        results[3 + L + i][:, : outs[i]] for i in range(L)
+    )
+    n_last = outs[-1]
+    events = ev[:, :, :L].transpose(0, 2, 1)  # (Tc, L, B)
+    return mem[:, :, :n_last], spk[:, :, :n_last], events, u_fin, r_fin

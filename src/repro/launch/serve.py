@@ -75,7 +75,7 @@ def _serve_snn(args) -> None:
     params = snn.init_params(jax.random.PRNGKey(0), cfg)
     engine = SNNStreamEngine(
         params, cfg, num_slots=args.batch, chunk_steps=args.chunk_steps,
-        seed=1,
+        seed=1, backend=args.snn_backend,
     )
 
     key = jax.random.PRNGKey(2)
@@ -148,6 +148,10 @@ def main(argv=None):
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--num-steps", type=int, default=25)
     ap.add_argument("--chunk-steps", type=int, default=5)
+    ap.add_argument("--snn-backend", default="auto",
+                    choices=["auto", "jnp", "fused"],
+                    help="chunk hot path: fused Pallas kernel, jnp "
+                         "oracle, or auto (fused on TPU)")
     args = ap.parse_args(argv)
 
     if args.snn:

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -73,17 +73,50 @@ class SNNStreamEngine:
         num_slots: int = 8,
         chunk_steps: int = 5,
         seed: int = 0,
+        backend: str = "auto",
+        capacities: Optional[Sequence[int]] = None,
     ):
         self.params = params
         self.cfg = cfg
         self.S = num_slots
         self.Tc = chunk_steps
         self._rng = jax.random.PRNGKey(seed)
-        self._chunk = jax.jit(
-            lambda states, spikes, active: runtime.run_chunk(
-                params, states, spikes, cfg, active=active
-            )
+        # prepare (fake-quantize) once at init — the original loop re-ran
+        # the full weight-set quantization inside every chunk execution
+        self._prepared = runtime.prepare_params(params, cfg)
+        self.backend = backend
+        self.capacities = (
+            tuple(int(c) for c in capacities)
+            if capacities is not None
+            else None
         )
+        Tc = chunk_steps
+
+        def _chunk_fn(states, spikes, active, take_steps):
+            new_states, out_mem, out_spikes, events = runtime.run_chunk(
+                self._prepared,
+                states,
+                spikes,
+                cfg,
+                active=active,
+                capacities=self.capacities,
+                prepared=True,
+                backend=backend,
+            )
+            # per-slot stats accumulate on device; only the request's own
+            # steps (take_steps per slot) count toward its result
+            m = (
+                jnp.arange(Tc, dtype=jnp.int32)[:, None]
+                < take_steps[None, :]
+            ).astype(jnp.float32)
+            stats = {
+                "counts": jnp.sum(out_spikes * m[:, :, None], axis=0),
+                "memsum": jnp.sum(out_mem * m[:, :, None], axis=0),
+                "events": jnp.sum(events * m[:, None, :], axis=0).T,
+            }
+            return new_states, stats
+
+        self._chunk = jax.jit(_chunk_fn)
         self._reset_all()
 
     # ------------------------------------------------------------- state
@@ -144,33 +177,37 @@ class SNNStreamEngine:
         K = cfg.layer_sizes[0]
         chunk = np.zeros((Tc, S, K), np.float32)
         active = np.zeros(S, np.float32)
+        take_steps = np.zeros(S, np.int32)
         for s in range(S):
             if self._slot_req[s] is None:
                 continue
             active[s] = 1.0
             d = int(self._slot_done[s])
             take = min(Tc, int(self._slot_total[s]) - d)
+            take_steps[s] = take
             chunk[:take, s] = self._slot_train[s][d : d + take]
 
-        self._states, out_mem, out_spikes, events = self._chunk(
-            self._states, jnp.asarray(chunk), jnp.asarray(active)
+        self._states, stats = self._chunk(
+            self._states,
+            jnp.asarray(chunk),
+            jnp.asarray(active),
+            jnp.asarray(take_steps),
         )
-        out_mem = np.asarray(out_mem)  # (Tc, S, C)
-        out_spikes = np.asarray(out_spikes)
-        events = np.asarray(events)  # (Tc, n_layers, S)
+        # single device->host sync per chunk: the (S, C)/(S, L) stats
+        # pytree, already masked and reduced on device — the (Tc, S, *)
+        # traces never leave the accelerator
+        stats = jax.device_get(stats)
 
         finished = []
         for s in range(S):
             if self._slot_req[s] is None:
                 continue
-            remaining = int(self._slot_total[s] - self._slot_done[s])
-            take = min(Tc, remaining)
-            # only the request's own steps count toward its result
-            self._slot_counts[s] += out_spikes[:take, s].sum(axis=0)
-            self._slot_memsum[s] += out_mem[:take, s].sum(axis=0)
-            self._slot_events[s] += events[:take, :, s].sum(axis=0)
+            take = int(take_steps[s])
+            self._slot_counts[s] += stats["counts"][s]
+            self._slot_memsum[s] += stats["memsum"][s]
+            self._slot_events[s] += stats["events"][s]
             self._slot_done[s] += take
-            self.total_events += float(events[:take, :, s].sum())
+            self.total_events += float(stats["events"][s].sum())
             self.total_steps += take
             if self._slot_done[s] >= self._slot_total[s]:
                 finished.append(s)

@@ -139,6 +139,7 @@ def event_bptt_forward(
     dropout_key: Optional[jax.Array] = None,
     capacity: Optional[int] = None,
     use_kernel: bool = False,
+    prepared: bool = False,
 ) -> Tuple[Array, Array, Array, Array]:
     """Differentiable event-driven analog of ``core.snn.forward``.
 
@@ -157,8 +158,10 @@ def event_bptt_forward(
     """
     ncfg = cfg.neuron_cfg
     # fake-quant (STE) outside the event layer so QAT gradients chain
-    # through the same clip/round path as the dense trainer
-    p = runtime._maybe_quant(params, cfg)
+    # through the same clip/round path as the dense trainer.  QAT must
+    # re-quantize *live* params every step; ``prepared=True`` is for
+    # callers holding frozen, already-prepared params (eval/serving).
+    p = params if prepared else runtime.prepare_params(params, cfg)
 
     T, B = spikes.shape[0], spikes.shape[1]
     n_layers = cfg.num_layers
@@ -219,3 +222,37 @@ def event_bptt_forward(
         step, (tuple(states), ev0, act0), (spikes, drop_keys)
     )
     return out_mem, out_spikes, jnp.stack(fin_ev), jnp.stack(fin_act)
+
+
+# --------------------------------------------------------------------------
+# Inference through the fused chunk path
+# --------------------------------------------------------------------------
+
+
+def event_eval_forward(
+    params: Dict[str, Dict[str, Array]],
+    spikes: Array,  # (T, B, K) input spike planes
+    cfg: snn.SNNConfig,
+    *,
+    backend: str = "auto",
+    capacities=None,
+    prepared: bool = False,
+) -> Tuple[Array, Array, Array]:
+    """Inference-mode forward on the *serving* hot path.
+
+    Evaluation during event-driven training previously re-ran the
+    differentiable BPTT graph; this routes through
+    ``events.runtime.run_chunk`` instead — fused Pallas chunk kernel on
+    TPU (``backend="auto"``), jnp oracle on CPU — with one-time parameter
+    preparation.  Returns (out_mem, out_spikes, events (n_layers, B)),
+    matching ``event_bptt_forward``'s inference outputs.
+    """
+    p = params if prepared else runtime.prepare_params(params, cfg)
+    return runtime.event_forward(
+        p,
+        spikes,
+        cfg,
+        capacities=capacities,
+        prepared=True,
+        backend=backend,
+    )

@@ -169,6 +169,28 @@ class EventTrainer(loop.Trainer):
             accum_steps=accum_steps,
         )
 
+    def evaluate(self, params, batch: Dict[str, Array], *, backend="auto"):
+        """Inference-mode accuracy + measured events on the serving path.
+
+        Routes through the fused-capable chunk runtime
+        (``event_layer.event_eval_forward``) rather than the BPTT graph:
+        params are prepared (fake-quantized) once per call, and on TPU
+        the fused Pallas chunk kernel runs the whole window.
+        """
+        from repro.sparse_train.event_layer import event_eval_forward
+
+        spikes = jnp.moveaxis(batch["spikes"], 0, 1)  # (B,T,K) -> (T,B,K)
+        out_mem, out_spikes, events = event_eval_forward(
+            params, spikes, self.snn_cfg, backend=backend
+        )
+        pred = snn.predict_from_traces(out_mem, out_spikes)
+        acc = jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+        return {
+            "accuracy": acc,
+            "events_per_layer": jnp.mean(events, axis=1),
+            "predictions": pred,
+        }
+
 
 def dvs_batches(
     seed: int, batch_size: int, tcfg: EventTrainConfig
