@@ -1,5 +1,6 @@
-"""Event-driven vs dense SNN execution across spike rates.
+"""Streaming-SNN serving benchmarks: rate sweep + open-loop async serving.
 
+Default mode — event-driven vs dense execution across spike rates.
 For each input spike rate r in [0, 1]:
   - ops: accumulator adds the AER path *measured* (events x fan_out) vs the
     dense path's fixed fan_in x fan_out x T — the paper's event-driven
@@ -11,24 +12,234 @@ For each input spike rate r in [0, 1]:
     scaling is the portable signal, kernel wall times are indicative only);
   - throughput: events/sec of the event-driven forward.
 
+``--quick`` mode — open-loop async serving on the paper's 4096-512-2
+collision config: Poisson arrivals submitted to the engine's
+``submit()/poll()`` scheduler while chunks are in flight, per-request
+deadlines (two deliberately already-due requests make the miss accounting
+deterministic), p50/p99 latency, queue wait, and a chunk-throughput
+cross-check against ``BENCH_snn.json`` (same config, batch, chunk length).
+Emits ``stream_bench.json``; ``--validate`` structurally checks it and
+fails on a chunk-throughput collapse vs the BENCH baseline.
+
 Usage:  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
+        PYTHONPATH=src python -m benchmarks.stream_bench --quick [--json P]
+        PYTHONPATH=src python -m benchmarks.stream_bench --validate P
    or:  PYTHONPATH=src python -m benchmarks.run stream
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn
+from benchmarks.common import emit, time_fn
 from repro.core import energy, quant, snn
+from repro.events import capacity as cap_mod
 from repro.events import runtime
 from repro.kernels import ops
 
 RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
+SCHEMA = "stream_bench/v1"
+# the open-loop engine chunk repeats BENCH_snn's overhauled_jnp work plus
+# the admit-mask reset and on-device stats reduction; a healthy engine
+# stays well above this floor (it exists to catch collapse, not jitter)
+MIN_VS_BENCH = 0.35
+
+
+def open_loop_run(
+    quick: bool = True, json_path: Optional[Path] = None
+) -> Dict:
+    """Open-loop async serving on the collision config -> stream_bench.json.
+
+    Matches BENCH_snn.json's quick geometry (4096-512-2, 4 slots, Tc=5,
+    jnp backend) so the chunk-throughput cross-check compares like with
+    like.
+    """
+    from repro.configs.collision_snn import CONFIG as cfg
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    json_path = Path(json_path) if json_path else DEFAULT_JSON
+    slots, Tc = 4, 5
+    n_req = 12 if quick else 32
+    arrival_rate = 40.0 if quick else 60.0
+    deadline_s = 2.0
+    n_hopeless = 2  # already-due deadlines: deterministic misses
+
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    K = cfg.layer_sizes[0]
+    rng = np.random.default_rng(0)
+    trains = [
+        (rng.random((cfg.num_steps, K)) < 0.2).astype(np.float32)
+        for _ in range(n_req)
+    ]
+    # autotuned capacities, like BENCH_snn.json's overhauled_jnp path —
+    # the chunk cross-check below must compare like with like
+    plan = cap_mod.autotune(
+        params, cfg, jnp.asarray(np.stack(trains, axis=1)),
+        percentile=100.0, safety=1.2, align=128,
+    )
+    engine = SNNStreamEngine(
+        params, cfg, num_slots=slots, chunk_steps=Tc, backend="jnp",
+        capacities=plan.capacities,
+    )
+    reqs = [
+        StreamRequest(
+            spikes=t,
+            deadline_s=0.0 if i < n_hopeless else deadline_s,
+        )
+        for i, t in enumerate(trains)
+    ]
+
+    # warm the compiled chunk so open-loop latencies measure steady state
+    engine.run([StreamRequest(spikes=trains[0])])
+
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_req))
+    results, i = [], 0
+    start = time.perf_counter()
+    while i < n_req or not engine.idle():
+        now = time.perf_counter() - start
+        while i < n_req and arrivals[i] <= now:
+            engine.submit(reqs[i])
+            i += 1
+        if engine.idle() and i < n_req:
+            time.sleep(max(arrivals[i] - (time.perf_counter() - start), 0.0))
+            continue
+        results.extend(engine.poll())
+    elapsed_s = time.perf_counter() - start
+
+    # aggregate over the collected results, not the engine's episode
+    # counters: an arrival gap longer than the service time drains the
+    # engine mid-trace, closing one episode and resetting counters at the
+    # next submit — the trace-wide numbers must span every episode
+    lat_ms = np.array([r.latency_s for r in results]) * 1e3
+    wait_ms = np.array([r.queue_wait_s for r in results]) * 1e3
+    miss_rate = sum(r.deadline_missed for r in results) / len(results)
+    events_total = float(
+        sum(r.events_per_layer.sum() for r in results)
+    )
+
+    # chunk-throughput cross-check: the engine's compiled chunk on a
+    # fully-active micro-batch, directly comparable to BENCH_snn.json's
+    # overhauled_jnp path (same config / batch / chunk length)
+    states = runtime.init_states(cfg, slots)
+    chunk = jnp.asarray(np.stack([t[:Tc] for t in trains[:slots]], axis=1))
+    act = jnp.ones((slots,), jnp.float32)
+    take = jnp.full((slots,), Tc, jnp.int32)
+    adm = jnp.zeros((slots,), jnp.float32)
+    t_chunk = time_fn(
+        engine._chunk, engine._prepared, states, chunk, act, take, adm,
+        warmup=1, iters=3 if quick else 5,
+    )
+    steps_per_s = Tc * slots / (t_chunk * 1e-6)
+    vs_bench = None
+    bench_path = REPO_ROOT / "BENCH_snn.json"
+    if bench_path.exists():
+        ref = json.loads(bench_path.read_text())
+        vs_bench = (
+            steps_per_s / ref["paths"]["overhauled_jnp"]["steps_per_s"]
+        )
+
+    doc = {
+        "schema": SCHEMA,
+        "mode": "quick" if quick else "full",
+        "config": {
+            "layer_sizes": list(cfg.layer_sizes),
+            "num_steps": cfg.num_steps,
+            "chunk_steps": Tc,
+            "num_slots": slots,
+            "requests": n_req,
+            "arrival_rate_rps": arrival_rate,
+            "deadline_ms": deadline_s * 1e3,
+            "hopeless_deadlines": n_hopeless,
+            "capacities": [int(c) for c in plan.capacities],
+        },
+        "open_loop": {
+            "served": len(results),
+            "p50_latency_ms": float(np.percentile(lat_ms, 50)),
+            "p99_latency_ms": float(np.percentile(lat_ms, 99)),
+            "mean_queue_wait_ms": float(wait_ms.mean()),
+            "deadline_miss_rate": float(miss_rate),
+            "events_per_s": events_total / max(elapsed_s, 1e-9),
+        },
+        "chunk": {
+            "us_per_chunk": t_chunk,
+            "steps_per_s": steps_per_s,
+            "vs_bench_overhauled_jnp": vs_bench,
+        },
+    }
+    json_path.write_text(json.dumps(doc, indent=2) + "\n")
+    emit(
+        "stream_bench/open_loop", float(np.percentile(lat_ms, 50)) * 1e3,
+        f"p99_ms={np.percentile(lat_ms, 99):.1f};"
+        f"miss_rate={doc['open_loop']['deadline_miss_rate']:.3f};"
+        f"events_per_s={doc['open_loop']['events_per_s']:.0f}",
+    )
+    emit(
+        "stream_bench/chunk", t_chunk,
+        f"steps_per_s={steps_per_s:.1f};"
+        f"vs_bench={vs_bench if vs_bench is None else round(vs_bench, 3)};"
+        f"json={json_path}",
+    )
+    return doc
+
+
+def validate(path: Path) -> List[str]:
+    """Structural validation of a stream_bench.json; returns error strings."""
+    errors: List[str] = []
+    try:
+        doc = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable JSON: {e}"]
+    if not isinstance(doc, dict):
+        return ["top level is not an object"]
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"schema {doc.get('schema')!r} != {SCHEMA!r}")
+    ol = doc.get("open_loop", {})
+    for k in ("p50_latency_ms", "p99_latency_ms", "events_per_s"):
+        v = ol.get(k)
+        if not isinstance(v, (int, float)) or not v > 0:
+            errors.append(f"open_loop.{k} not a positive number: {v!r}")
+    wait = ol.get("mean_queue_wait_ms")
+    if not isinstance(wait, (int, float)) or wait < 0:
+        errors.append(f"open_loop.mean_queue_wait_ms invalid: {wait!r}")
+    served = ol.get("served")
+    want = doc.get("config", {}).get("requests")
+    if served != want:
+        errors.append(f"open_loop.served {served!r} != requested {want!r}")
+    miss = ol.get("deadline_miss_rate")
+    # the run plants already-due deadlines, so the rate must be nonzero
+    if not isinstance(miss, (int, float)) or not (0.0 < miss <= 1.0):
+        errors.append(
+            f"open_loop.deadline_miss_rate not in (0, 1]: {miss!r}"
+        )
+    chunk = doc.get("chunk", {})
+    for k in ("us_per_chunk", "steps_per_s"):
+        v = chunk.get(k)
+        if not isinstance(v, (int, float)) or not v > 0:
+            errors.append(f"chunk.{k} not a positive number: {v!r}")
+    vs = chunk.get("vs_bench_overhauled_jnp")
+    if vs is None:
+        errors.append(
+            "chunk.vs_bench_overhauled_jnp is null — generate "
+            "BENCH_snn.json (benchmarks.run --quick) before this bench"
+        )
+    elif not isinstance(vs, (int, float)) or vs < MIN_VS_BENCH:
+        errors.append(
+            f"chunk throughput regression: engine chunk at {vs!r}x the "
+            f"BENCH_snn.json overhauled_jnp path (floor {MIN_VS_BENCH})"
+        )
+    return errors
 
 
 def run() -> None:
@@ -40,7 +251,25 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale 4096-512-2 (slow on CPU)")
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--quick", action="store_true",
+                    help="open-loop async serving bench -> stream_bench.json"
+                         " (combine with --full for the longer trace)")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="output path for --quick (default repo root)")
+    ap.add_argument("--validate", type=Path, default=None,
+                    help="validate an existing stream_bench.json and exit")
     args = ap.parse_args(argv)
+    if args.validate is not None:
+        errors = validate(args.validate)
+        if errors:
+            for e in errors:
+                print(f"stream_bench.json INVALID: {e}", file=sys.stderr)
+            return 1
+        print(f"{args.validate}: OK")
+        return 0
+    if args.quick:
+        open_loop_run(quick=not args.full, json_path=args.json)
+        return 0
 
     sizes = (4096, 512, 2) if args.full else (1024, 256, 2)
     cfg = snn.SNNConfig(layer_sizes=sizes, num_steps=25)
@@ -101,4 +330,4 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -1,15 +1,19 @@
-"""Demo: streaming event-driven SNN serving.
+"""Demo: streaming event-driven SNN serving with async admission.
 
 Builds a small collision-avoidance SNN, then serves a mixed workload
-through the streaming engine:
+through the streaming engine's ``submit()/poll()`` scheduler:
 
   1. rate-coded camera frames (procedural collision scenes), and
   2. synthetic DVS event-camera recordings (AER brightness-change events),
+     submitted *mid-flight* — while the rate-coded requests' chunks are
+     still integrating — with a latency deadline and elevated priority,
+     so they overtake the queued tail of the first batch.
 
-with more requests than slots, so continuous batching and the persistent
-per-slot membrane state are both exercised.  Prints per-request latency,
-measured spike rate and measured energy — note how much cheaper the sparse
-DVS inputs are than dense-ish rate coding at identical network shape.
+More requests than slots, so continuous batching, the persistent per-slot
+membrane state, and deadline/queue-wait accounting are all exercised.
+Prints per-request latency, queue wait, deadline verdict, measured spike
+rate and measured energy — note how much cheaper the sparse DVS inputs
+are than dense-ish rate coding at identical network shape.
 
 Run:  PYTHONPATH=src python examples/event_stream_serving.py \
           [--steps 25] [--seed 0] [--requests 12]
@@ -48,14 +52,15 @@ def main():
     engine = SNNStreamEngine(params, cfg, num_slots=4, chunk_steps=5,
                              seed=args.seed)
 
-    reqs = []
+    rate_reqs = []
     if n_rate:
         # rate-coded procedural camera frames
         data_cfg = collision.CollisionConfig(image_hw=HW, num_train=0,
                                              num_test=n_rate, seed=args.seed)
         _, _, frames, labels = collision.generate(data_cfg)
-        reqs += [StreamRequest(image=f.reshape(-1)) for f in frames]
+        rate_reqs = [StreamRequest(image=f.reshape(-1)) for f in frames]
 
+    dvs_reqs = []
     if n_dvs:
         # synthetic DVS event streams, densified to the engine's input plane
         # (ON events only — the engine's input layer is HW*HW wide; see
@@ -66,20 +71,35 @@ def main():
         )
         planes = aer.input_planes(stream, cfg.num_steps, HW * HW,
                                   polarity_mode="on_only")
-        reqs += [
-            StreamRequest(spikes=np.asarray(planes[:, i]))
+        # the "collision sensor" traffic class: tight deadline, priority —
+        # admitted ahead of the queued rate-coded tail
+        dvs_reqs = [
+            StreamRequest(spikes=np.asarray(planes[:, i]),
+                          deadline_s=2.0, priority=1)
             for i in range(n_dvs)
         ]
 
-    results = engine.run(reqs)
+    # async admission: rate-coded requests first, then the DVS burst lands
+    # mid-flight after a couple of scheduler rounds
+    for r in rate_reqs:
+        engine.submit(r)
+    results = engine.poll() + engine.poll()
+    for r in dvs_reqs:
+        engine.submit(r)
+    results += engine.drain()
+    results.sort(key=lambda r: r.request_id)
     kinds = ["rate"] * n_rate + ["dvs"] * n_dvs
-    print("req kind  pred  latency   in-rate   events(l0,l1)   energy")
+    print("req kind  pred  latency     wait  dl    in-rate   "
+          "events(l0,l1)   energy")
     for r in results:
         ev = ", ".join(f"{e:.0f}" for e in r.events_per_layer)
+        dl = "-" if r.deadline_s is None else (
+            "MISS" if r.deadline_missed else "ok"
+        )
         print(
             f"{r.request_id:3d} {kinds[r.request_id]:5s} {r.prediction:3d} "
-            f"{r.latency_s*1e3:8.1f}ms  {r.spike_rate:7.3f}   "
-            f"[{ev:>12s}]  {r.energy_pj/1e3:8.1f} nJ"
+            f"{r.latency_s*1e3:8.1f}ms {r.queue_wait_s*1e3:7.1f}ms {dl:4s} "
+            f"{r.spike_rate:7.3f}   [{ev:>12s}]  {r.energy_pj/1e3:8.1f} nJ"
         )
     for kind in ("rate", "dvs"):
         sel = [r for r in results if kinds[r.request_id] == kind]
@@ -90,7 +110,8 @@ def main():
         print(f"{kind:5s}: mean input rate {rt:.3f}, "
               f"mean measured energy {e/1e3:.1f} nJ/inference")
     print(f"engine throughput: {engine.events_per_sec():.0f} events/s "
-          f"over {engine.total_steps} slot-steps")
+          f"over {engine.total_steps} slot-steps | deadline misses: "
+          f"{engine.deadline_misses}/{engine.completed}")
 
 
 if __name__ == "__main__":

@@ -141,6 +141,26 @@ def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+# --------------------------------------------------------------- shard_map
+# jax moved shard_map out of experimental and renamed check_rep->check_vma;
+# wrap both spellings so sharded code runs on every container toolchain
+# (shared by distributed/pipeline.py and serving/snn_engine.py).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = {"check_vma": False}
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = {"check_rep": False}
+
+
+def shard_map_unchecked(fn, mesh: Mesh, *, in_specs, out_specs):
+    """Version-portable ``shard_map`` with replication checking disabled."""
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_CHECK_KW
+    )
+
+
 # ------------------------------------------------- activation constraints
 # MaxText-style: model code calls `constrain(x, logical_axes)` at the key
 # activation points (block inputs, attention heads, mlp hidden, MoE

@@ -24,15 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-# jax moved shard_map out of experimental and renamed check_rep->check_vma;
-# support both spellings so the pipeline runs on every container toolchain.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _CHECK_KW = {"check_vma": False}
-else:  # jax <= 0.4.x
-    from jax.experimental.shard_map import shard_map as _shard_map
-
-    _CHECK_KW = {"check_rep": False}
+from repro.distributed.partitioning import shard_map_unchecked
 
 PyTree = Any
 
@@ -52,11 +44,10 @@ def pipeline_forward(
     S = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
 
     @functools.partial(
-        _shard_map,
+        shard_map_unchecked,
         mesh=mesh,
         in_specs=(P(axis), P(None)),
         out_specs=P(None),
-        **_CHECK_KW,
     )
     def pipe_fn(stage_params, microbatches):
         # stage_params leaves arrive as (1, ...) local slices

@@ -385,15 +385,23 @@ def event_forward_aer(
     def step(carry, t):
         states, ev = carry
         start, end = boundaries[:, t], boundaries[:, t + 1]
-        valid = (offs[None, :] >= start[:, None]) & (
-            offs[None, :] < end[:, None]
+        # mask by polarity != 0 on top of the window: padding slots carry
+        # polarity 0, and while canonical pads sit at time
+        # num_steps_at_encode (outside every window), merge() without
+        # num_steps stamps pads at max(times)+1 — which for a stream
+        # shorter than T lands *inside* [0, T).  An end-start count would
+        # then bill padding as events, inflating measured events/energy.
+        valid = (
+            (offs[None, :] >= start[:, None])
+            & (offs[None, :] < end[:, None])
+            & (stream.polarity != 0)
         )
         addrs = jnp.where(valid, stream.addrs, 0)
         values = jnp.where(valid, stream.polarity.astype(jnp.float32), 0.0)
         new_states, new_ev = [], []
         lp = p["layer0"]
         cur = gather_current(lp["w"], lp["b"], addrs, values)
-        count = (end - start).astype(jnp.float32)
+        count = jnp.sum(valid, axis=-1).astype(jnp.float32)
         h = None
         for i in range(n_layers):
             lp = p[f"layer{i}"]

@@ -4,9 +4,11 @@ LM zoo (token decode, continuous batching over prompts):
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
       --reduced --requests 8 --new-tokens 16 [--quant q115]
 
-SNN streaming (event-driven, persistent membrane state, measured energy):
+SNN streaming (event-driven, persistent membrane state, measured energy;
+async admission with open-loop Poisson arrivals, deadlines, priorities):
   PYTHONPATH=src python -m repro.launch.serve --snn --requests 16 \
-      --batch 4 --chunk-steps 5 --image-hw 32 [--dvs]
+      --batch 4 --chunk-steps 5 --image-hw 32 [--dvs] \
+      [--arrival-rate 20] [--deadline-ms 500]
 """
 
 from __future__ import annotations
@@ -102,23 +104,68 @@ def _serve_snn(args) -> None:
         for x in test_x:
             reqs.append(StreamRequest(image=x.reshape(-1)))
 
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+    if deadline_s is not None:
+        reqs = [dataclasses.replace(r, deadline_s=deadline_s) for r in reqs]
+
     t0 = time.time()
-    results = engine.run(reqs)
+    if args.arrival_rate > 0:
+        # open-loop: Poisson arrivals at the requested rate, submitted to
+        # the async engine while earlier requests' chunks are in flight
+        gaps = np.random.default_rng(3).exponential(
+            1.0 / args.arrival_rate, len(reqs)
+        )
+        arrivals = np.cumsum(gaps)
+        results, i = [], 0
+        start = time.perf_counter()
+        while i < len(reqs) or not engine.idle():
+            now = time.perf_counter() - start
+            while i < len(reqs) and arrivals[i] <= now:
+                engine.submit(reqs[i])
+                i += 1
+            if engine.idle() and i < len(reqs):
+                time.sleep(
+                    max(arrivals[i] - (time.perf_counter() - start), 0.0)
+                )
+                continue
+            results.extend(engine.poll())
+        results.sort(key=lambda r: r.request_id)
+    else:
+        results = engine.run(reqs)
     dt = time.time() - t0
     lat = np.array([r.latency_s for r in results])
+    qwait = np.array([r.queue_wait_s for r in results])
     energy = np.array([r.energy_pj for r in results])
     rate = np.array([r.spike_rate for r in results])
+    # aggregate over results, not engine episode counters: an open-loop
+    # trace with arrival gaps longer than the service time spans several
+    # engine episodes, and episode counters reset at each new episode
+    misses = sum(r.deadline_missed for r in results)
+    events_total = float(sum(r.events_per_layer.sum() for r in results))
     src = f"dvs-events/{args.polarity}" if args.dvs else "rate-coded"
+    loop = (
+        f"open-loop {args.arrival_rate:.0f} req/s"
+        if args.arrival_rate > 0
+        else "closed-loop"
+    )
     print(
         f"snn[{input_size}->{args.hidden}->2, T={cfg.num_steps}, {src}]: "
-        f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots"
+        f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots "
+        f"({loop})"
     )
     print(
-        f"  latency p50/p95: {np.percentile(lat, 50)*1e3:.1f}/"
-        f"{np.percentile(lat, 95)*1e3:.1f} ms | "
-        f"throughput: {engine.events_per_sec():.0f} events/s | "
+        f"  latency p50/p99: {np.percentile(lat, 50)*1e3:.1f}/"
+        f"{np.percentile(lat, 99)*1e3:.1f} ms | "
+        f"queue wait p50: {np.percentile(qwait, 50)*1e3:.1f} ms | "
+        f"throughput: {events_total/max(dt, 1e-9):.0f} events/s | "
         f"input rate: {rate.mean():.3f}"
     )
+    if deadline_s is not None:
+        print(
+            f"  deadline {args.deadline_ms:.0f} ms: "
+            f"missed {misses}/{len(results)} "
+            f"({misses/max(len(results), 1):.1%})"
+        )
     print(
         f"  measured energy/inference: {energy.mean()/1e3:.1f} nJ "
         f"(model estimate from counted events)"
@@ -148,6 +195,12 @@ def main(argv=None):
     ap.add_argument("--hidden", type=int, default=128)
     ap.add_argument("--num-steps", type=int, default=25)
     ap.add_argument("--chunk-steps", type=int, default=5)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate in req/s "
+                         "(0 = closed-loop batch, with --snn)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request latency budget in ms "
+                         "(0 = no deadline, with --snn)")
     ap.add_argument("--snn-backend", default="auto",
                     choices=["auto", "jnp", "fused"],
                     help="chunk hot path: fused Pallas kernel, jnp "

@@ -1,37 +1,54 @@
-"""Streaming SNN serving engine: micro-batched, stateful, event-driven.
+"""Streaming SNN serving engine: async admission, deadline-aware scheduling.
 
 The LM ``ServeEngine`` batches token sequences; spiking workloads stream
 *time*: each request is a spike train (rate-coded image or DVS event
 stream) that must be integrated over its coding window while the neuron
-membranes persist between chunks.  This engine serves many such requests
-concurrently:
+membranes persist between chunks.  The paper's case study — collision
+avoidance — is a latency-critical, always-on workload, so the engine is an
+*async* scheduler rather than a one-shot batch loop:
 
+- **submit()/poll()/drain().** Requests arrive at any time, including
+  while chunks are in flight.  ``submit`` enqueues (returning a request
+  id); ``poll`` admits queued requests into free slots and advances every
+  active slot by one chunk, returning whatever finished; ``drain`` polls
+  until the engine is idle.  ``run(requests)`` survives as a thin
+  batch-compatibility wrapper.
+- **EDF admission.** Each request carries an optional relative
+  ``deadline_s`` and an integer ``priority``.  The queue is ordered by
+  (priority desc, earliest absolute deadline first, FIFO); every result
+  reports its queue wait and whether its deadline was missed, and the
+  engine tracks an episode-level miss rate.
 - **Slots.** A fixed micro-batch of ``num_slots`` concurrent requests
   shares one compiled event-driven chunk step
   (``events.runtime.run_chunk``).  Per-slot membrane + refractory state
   lives across chunks; slot shapes are static so nothing recompiles.
-- **Continuous batching.** When a request completes its window, the slot's
-  state is zeroed and the next queued request is admitted at that slot —
-  the chunk function never stalls on stragglers.
+  Slot turnover (zeroing state on admit) happens *inside* the jitted
+  chunk function via an admit mask — no per-admit host-side ``.at[s].set``
+  roundtrips.
+- **Sharded slots.** Pass ``mesh=`` to shard the slot axis over the mesh
+  (``distributed.partitioning`` rules + ``shard_map``), scaling
+  ``num_slots`` past one device while keeping the single-compiled-chunk
+  invariant and jnp/fused backend parity.
 - **Measured energy.** Every chunk reports per-step, per-layer event
   counts.  A request's energy estimate is priced from the events it
   *actually* generated via ``core.energy.snn_ops_from_events`` — not from
   an assumed spike rate.
-- **Latency.** Each result carries admit->finish wall latency plus the
-  step count, so tail behavior under queueing is observable.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import coding, energy, neuron, snn
+from repro.distributed import partitioning
 from repro.events import runtime
 
 Array = jax.Array
@@ -43,11 +60,18 @@ class StreamRequest:
 
     Provide either ``image`` ((K,) floats in [0,1], rate-encoded on admit)
     or ``spikes`` ((T, K) pre-encoded train, e.g. densified DVS events).
+
+    ``deadline_s`` is relative to submission time; a request that finishes
+    later is still served but reported (and counted) as missed.  Higher
+    ``priority`` admits sooner; within a priority class admission is
+    earliest-deadline-first, then FIFO (deadline-less requests last).
     """
 
     image: Optional[np.ndarray] = None
     spikes: Optional[np.ndarray] = None
-    num_steps: Optional[int] = None  # defaults to cfg.num_steps
+    num_steps: Optional[int] = None  # None -> cfg.num_steps (must be >= 1)
+    deadline_s: Optional[float] = None  # relative latency budget
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -56,14 +80,18 @@ class StreamResult:
     prediction: int
     spike_counts: np.ndarray  # (n_class,) output spike counts
     steps: int
-    latency_s: float
+    latency_s: float  # submit -> finish (includes queue wait)
+    queue_wait_s: float  # submit -> admission into a slot
     events_per_layer: np.ndarray  # (n_layers,) measured input events
     spike_rate: float  # measured mean input rate of layer 0
     energy_pj: float  # priced from measured events
+    deadline_s: Optional[float] = None  # the request's relative budget
+    deadline_missed: bool = False
 
 
 class SNNStreamEngine:
-    """Micro-batching scheduler over the event-driven SNN runtime."""
+    """Async-admission, deadline-aware scheduler over the event-driven
+    SNN chunk runtime."""
 
     def __init__(
         self,
@@ -75,6 +103,7 @@ class SNNStreamEngine:
         seed: int = 0,
         backend: str = "auto",
         capacities: Optional[Sequence[int]] = None,
+        mesh=None,
     ):
         self.params = params
         self.cfg = cfg
@@ -85,6 +114,7 @@ class SNNStreamEngine:
         # the full weight-set quantization inside every chunk execution
         self._prepared = runtime.prepare_params(params, cfg)
         self.backend = backend
+        self.mesh = mesh
         self.capacities = (
             tuple(int(c) for c in capacities)
             if capacities is not None
@@ -92,9 +122,21 @@ class SNNStreamEngine:
         )
         Tc = chunk_steps
 
-        def _chunk_fn(states, spikes, active, take_steps):
+        def _chunk_fn(prepared, states, spikes, active, take_steps, admit):
+            # in-jit slot turnover: slots admitted since the previous chunk
+            # start from zeroed membrane/refractory state here, inside the
+            # compiled function, instead of per-admit host-side
+            # ``u.at[s].set(0)`` roundtrips
+            fresh = admit[:, None] > 0
+            states = [
+                neuron.NeuronState(
+                    u=jnp.where(fresh, 0.0, st.u),
+                    refrac=jnp.where(fresh, 0, st.refrac),
+                )
+                for st in states
+            ]
             new_states, out_mem, out_spikes, events = runtime.run_chunk(
-                self._prepared,
+                prepared,
                 states,
                 spikes,
                 cfg,
@@ -116,8 +158,39 @@ class SNNStreamEngine:
             }
             return new_states, stats
 
-        self._chunk = jax.jit(_chunk_fn)
+        if mesh is None:
+            self._chunk = jax.jit(_chunk_fn)
+        else:
+            self._chunk = jax.jit(
+                self._shard_over_slots(_chunk_fn, mesh, num_slots)
+            )
         self._reset_all()
+
+    @staticmethod
+    def _shard_over_slots(chunk_fn, mesh, num_slots: int):
+        """Wrap the chunk function in shard_map with the slot axis split
+        over the mesh's batch axes (``distributed.partitioning`` rules).
+
+        Params are replicated; states, spike planes, masks and stats all
+        shard along slots.  The chunk body is elementwise over slots, so
+        sharding is exact — jnp/fused parity and the single-compiled-chunk
+        invariant carry over unchanged.
+        """
+        slot_spec = partitioning.spec_for((num_slots,), ("batch",), mesh)
+        if len(slot_spec) == 0 or slot_spec[0] is None:
+            raise ValueError(
+                f"num_slots={num_slots} is not shardable over mesh axes "
+                f"{dict(zip(mesh.axis_names, mesh.devices.shape))}; pick a "
+                f"slot count divisible by the mesh's batch axes"
+            )
+        slot = slot_spec[0]
+        return partitioning.shard_map_unchecked(
+            chunk_fn,
+            mesh,
+            # (params, states, spikes (Tc,S,K), active, take_steps, admit)
+            in_specs=(P(), P(slot), P(None, slot), P(slot), P(slot), P(slot)),
+            out_specs=(P(slot), P(slot)),
+        )
 
     # ------------------------------------------------------------- state
     def _reset_all(self) -> None:
@@ -127,25 +200,96 @@ class SNNStreamEngine:
         self._slot_train: List[Optional[np.ndarray]] = [None] * S
         self._slot_done = np.zeros(S, np.int64)  # steps consumed
         self._slot_total = np.zeros(S, np.int64)
+        self._slot_submit_t = np.zeros(S, np.float64)
         self._slot_admit_t = np.zeros(S, np.float64)
+        self._slot_deadline: List[Optional[float]] = [None] * S  # absolute
+        self._slot_rel_deadline: List[Optional[float]] = [None] * S
+        self._pending_admit = np.zeros(S, bool)  # in-jit reset at next tick
         self._slot_counts = np.zeros((S, cfg.layer_sizes[-1]), np.float64)
         self._slot_memsum = np.zeros((S, cfg.layer_sizes[-1]), np.float64)
         self._slot_events = np.zeros((S, cfg.num_layers), np.float64)
+        self._queue: List[tuple] = []  # heap: (key, rid, req, t_sub, dl)
+        self._seq = 0
+        self._next_rid = 0
+        self._episode_open = False
+        self._episode_t0 = 0.0
         self.total_events = 0.0
         self.total_steps = 0
         self.wall_s = 0.0
+        self.completed = 0
+        self.deadline_misses = 0
 
-    def _zero_slot_state(self, s: int) -> None:
-        self._states = [
-            neuron.NeuronState(
-                u=st.u.at[s].set(0.0), refrac=st.refrac.at[s].set(0)
-            )
-            for st in self._states
-        ]
+    def _begin_episode(self, now: float) -> None:
+        # throughput + deadline counters are per-episode: an episode opens
+        # at the first submit on an idle engine and closes when the last
+        # queued request drains (see events_per_sec for the denominator)
+        self.total_events = 0.0
+        self.total_steps = 0
+        self.completed = 0
+        self.deadline_misses = 0
+        self._episode_t0 = now
+        self._episode_open = True
 
-    def _admit(self, s: int, req_id: int, req: StreamRequest) -> None:
+    # --------------------------------------------------------- admission
+    def _resolve_steps(self, req: StreamRequest) -> int:
+        # explicit None check: ``req.num_steps or cfg.num_steps`` silently
+        # treated num_steps=0 as unset
+        T = (
+            self.cfg.num_steps
+            if req.num_steps is None
+            else int(req.num_steps)
+        )
+        if T < 1:
+            raise ValueError(f"num_steps must be >= 1, got {req.num_steps}")
+        return T
+
+    def submit(self, req: StreamRequest) -> int:
+        """Enqueue one request; returns its request id.
+
+        Admission happens at the next ``poll()``: free slots are filled in
+        (priority desc, earliest deadline, FIFO) order, so a later submit
+        with a tighter deadline overtakes queued work it never saw.
+        """
+        T = self._resolve_steps(req)
+        K = self.cfg.layer_sizes[0]
+        if req.spikes is not None:
+            shape = tuple(np.shape(req.spikes))
+            if shape != (T, K):
+                raise ValueError(
+                    f"request spikes shape {shape} != ({T}, {K})"
+                )
+        elif req.image is not None:
+            shape = tuple(np.shape(req.image))
+            if shape != (K,):
+                raise ValueError(f"request image shape {shape} != ({K},)")
+        else:
+            raise ValueError("StreamRequest needs image or spikes")
+        now = time.perf_counter()
+        if not self._episode_open:
+            self._begin_episode(now)
+        rid = self._next_rid
+        self._next_rid += 1
+        dl = now + req.deadline_s if req.deadline_s is not None else None
+        key = (
+            -int(req.priority),
+            0 if dl is not None else 1,  # deadline-less requests last
+            dl if dl is not None else 0.0,
+            self._seq,  # FIFO tiebreak; also keeps heap entries orderable
+        )
+        self._seq += 1
+        heapq.heappush(self._queue, (key, rid, req, now, dl))
+        return rid
+
+    def _admit(
+        self,
+        s: int,
+        rid: int,
+        req: StreamRequest,
+        t_submit: float,
+        abs_deadline: Optional[float],
+    ) -> None:
         cfg = self.cfg
-        T = req.num_steps or cfg.num_steps
+        T = self._resolve_steps(req)
         if req.spikes is not None:
             train = np.asarray(req.spikes, np.float32)
         elif req.image is not None:
@@ -157,15 +301,18 @@ class SNNStreamEngine:
             raise ValueError("StreamRequest needs image or spikes")
         if train.shape != (T, cfg.layer_sizes[0]):
             raise ValueError(
-                f"request {req_id}: train shape {train.shape} != "
+                f"request {rid}: train shape {train.shape} != "
                 f"({T}, {cfg.layer_sizes[0]})"
             )
-        self._zero_slot_state(s)
-        self._slot_req[s] = req_id
+        self._pending_admit[s] = True  # state zeroed in-jit at next tick
+        self._slot_req[s] = rid
         self._slot_train[s] = train
         self._slot_done[s] = 0
         self._slot_total[s] = T
+        self._slot_submit_t[s] = t_submit
         self._slot_admit_t[s] = time.perf_counter()
+        self._slot_deadline[s] = abs_deadline
+        self._slot_rel_deadline[s] = req.deadline_s
         self._slot_counts[s] = 0.0
         self._slot_memsum[s] = 0.0
         self._slot_events[s] = 0.0
@@ -188,11 +335,14 @@ class SNNStreamEngine:
             chunk[:take, s] = self._slot_train[s][d : d + take]
 
         self._states, stats = self._chunk(
+            self._prepared,
             self._states,
             jnp.asarray(chunk),
             jnp.asarray(active),
             jnp.asarray(take_steps),
+            jnp.asarray(self._pending_admit.astype(np.float32)),
         )
+        self._pending_admit[:] = False
         # single device->host sync per chunk: the (S, C)/(S, L) stats
         # pytree, already masked and reduced on device — the (Tc, S, *)
         # traces never leave the accelerator
@@ -222,46 +372,88 @@ class SNNStreamEngine:
         )
         counts = self._slot_counts[s]
         pred = int(np.argmax(counts + 1e-6 * self._slot_memsum[s]))
+        finish_t = time.perf_counter()
+        dl = self._slot_deadline[s]
+        missed = dl is not None and finish_t > dl
+        self.completed += 1
+        if missed:
+            self.deadline_misses += 1
         res = StreamResult(
             request_id=self._slot_req[s],
             prediction=pred,
             spike_counts=counts.copy(),
             steps=T,
-            latency_s=time.perf_counter() - self._slot_admit_t[s],
+            latency_s=finish_t - self._slot_submit_t[s],
+            queue_wait_s=self._slot_admit_t[s] - self._slot_submit_t[s],
             events_per_layer=ev,
             spike_rate=float(ev[0] / (T * cfg.layer_sizes[0])),
             energy_pj=oc.energy_pj(),
+            deadline_s=self._slot_rel_deadline[s],
+            deadline_missed=missed,
         )
         self._slot_req[s] = None
         self._slot_train[s] = None
         return res
 
-    # --------------------------------------------------------------- run
-    def run(self, requests: List[StreamRequest]) -> List[StreamResult]:
-        """Serve all requests (continuous batching) and return results in
-        request order."""
-        queue = list(enumerate(requests))
-        results: List[StreamResult] = []
-        # throughput counters are per-run: events_per_sec() reports the
-        # current serving episode, not the engine's lifetime
-        self.total_events = 0.0
-        self.total_steps = 0
+    # ----------------------------------------------------------- serving
+    def idle(self) -> bool:
+        """True when no request is queued or resident in a slot."""
+        return not self._queue and all(r is None for r in self._slot_req)
+
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def poll(self) -> List[StreamResult]:
+        """One scheduler round: admit queued requests into free slots
+        (priority/EDF order), advance all active slots by one chunk, and
+        return the requests that finished.  Non-blocking in the scheduling
+        sense: returns [] when the engine is idle."""
         for s in range(self.S):
-            if not queue:
-                break
-            rid, req = queue.pop(0)
-            self._admit(s, rid, req)
-        t0 = time.perf_counter()
-        while any(r is not None for r in self._slot_req):
-            for s in self._tick():
-                results.append(self._finalize(s))
-                if queue:
-                    rid, req = queue.pop(0)
-                    self._admit(s, rid, req)
-        self.wall_s = time.perf_counter() - t0
+            if self._slot_req[s] is None and self._queue:
+                _, rid, req, t_sub, dl = heapq.heappop(self._queue)
+                self._admit(s, rid, req, t_sub, dl)
+        if all(r is None for r in self._slot_req):
+            return []
+        results = [self._finalize(s) for s in self._tick()]
+        if self.idle() and self._episode_open:
+            self.wall_s = time.perf_counter() - self._episode_t0
+            self._episode_open = False
+        return results
+
+    def drain(self) -> List[StreamResult]:
+        """Poll until idle; returns results in completion order."""
+        results: List[StreamResult] = []
+        while not self.idle():
+            results.extend(self.poll())
+        return results
+
+    def run(self, requests: List[StreamRequest]) -> List[StreamResult]:
+        """Batch-compatibility wrapper over submit()/drain(): serve all
+        requests and return results sorted by request id (submission
+        order)."""
+        for req in requests:
+            self.submit(req)
+        results = self.drain()
         results.sort(key=lambda r: r.request_id)
         return results
 
+    # ------------------------------------------------------------- stats
     def events_per_sec(self) -> float:
-        """Throughput of the last ``run()``; 0.0 before any run."""
-        return self.total_events / max(self.wall_s, 1e-9)
+        """Event throughput of the serving episode.
+
+        Counters reset when an episode begins (first submit on an idle
+        engine); the denominator is the *episode* clock — elapsed time
+        since episode start while requests are in flight, the episode's
+        final wall time once it drains — so mid-episode reads never mix a
+        stale denominator with fresh numerators.  0.0 before any serving.
+        """
+        if self._episode_open:
+            denom = time.perf_counter() - self._episode_t0
+        else:
+            denom = self.wall_s
+        return self.total_events / max(denom, 1e-9)
+
+    def deadline_miss_rate(self) -> float:
+        """Fraction of this episode's completed requests that missed their
+        deadline (requests without a deadline count as met)."""
+        return self.deadline_misses / max(self.completed, 1)

@@ -306,6 +306,39 @@ def test_event_forward_aer_matches_event_forward():
     np.testing.assert_allclose(np.asarray(aev), np.asarray(eev))
 
 
+def test_event_forward_aer_ignores_in_window_padding():
+    """Regression: ``merge`` without ``num_steps`` stamps pad slots at
+    max(times)+1; for streams encoded with a window shorter than the
+    network's T those pads land *inside* [0, T).  The old layer-0 count
+    (end - start) billed them as events, inflating measured events and
+    energy — counts must cover valid (polarity != 0) events only."""
+    N = 40
+    cfg = snn.SNNConfig(layer_sizes=(N, 12, 2), num_steps=10)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    T_enc = 3  # events confined to the first 3 steps of the T=10 window
+    a_dense = _rand_spikes(T_enc, 2, N, 0.3)
+    b_dense = _rand_spikes(T_enc, 2, N, 0.3) * (a_dense == 0)
+    sa = aer.dense_to_aer(a_dense, capacity=T_enc * N)
+    sb = aer.dense_to_aer(b_dense, capacity=T_enc * N)
+    merged = aer.merge(sa, sb, num_addrs=N, capacity=2 * T_enc * N)
+    # the trap is armed: pad slots sit strictly inside the [0, T) window
+    assert int(np.asarray(merged.times).max()) < cfg.num_steps
+    _, _, ev = runtime.event_forward_aer(params, merged, cfg)
+    # measured layer-0 events == the stream's valid-event total
+    np.testing.assert_allclose(
+        np.asarray(ev)[0], np.asarray(merged.count, np.float32)
+    )
+    # and full parity (outputs + all layer counts) with the dense path
+    dense = aer.input_planes(merged, cfg.num_steps, N, polarity_mode="signed")
+    em, es, eev = runtime.event_forward(params, dense, cfg)
+    am, asp, aev = runtime.event_forward_aer(params, merged, cfg)
+    np.testing.assert_allclose(
+        np.asarray(am), np.asarray(em), atol=1e-5, rtol=1e-5
+    )
+    np.testing.assert_array_equal(np.asarray(asp), np.asarray(es))
+    np.testing.assert_allclose(np.asarray(aev), np.asarray(eev))
+
+
 def test_measured_ops_scale_with_rate():
     """Acceptance: the AER path's op count scales with spike rate — fewer
     accumulator adds than dense at rate < 1.0 (via core.energy.OpCount)."""

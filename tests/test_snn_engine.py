@@ -1,13 +1,17 @@
 """Streaming SNN serving engine: correctness of the scheduler (state
-persistence across chunks, continuous batching, slot isolation) and of the
-measured per-request energy accounting."""
+persistence across chunks, continuous batching, async admission with
+deadlines/priorities, slot isolation) and of the measured per-request
+energy accounting."""
+
+import dataclasses
 
 import numpy as np
+import pytest
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import snn
+from repro.core import energy, snn
 from repro.events import runtime
 from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
 
@@ -126,3 +130,198 @@ def test_rate_coded_image_requests():
     for r in results:
         assert r.prediction in (0, 1)
         assert 0.0 < r.spike_rate < 1.0
+
+
+# ------------------------------------------------- async admission + EDF
+def _oracle(params, train):
+    """Batch-oracle result for one request: plain event-driven forward."""
+    _, out_spikes, ev = runtime.event_forward(
+        params, jnp.asarray(train)[:, None, :], CFG
+    )
+    return np.asarray(out_spikes.sum(0))[0], np.asarray(ev)[:, 0]
+
+
+def test_num_steps_zero_rejected():
+    """Regression: ``req.num_steps or cfg.num_steps`` silently treated
+    num_steps=0 as unset; 0 (and negatives) must be rejected loudly."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1)
+    with pytest.raises(ValueError, match="num_steps"):
+        eng.submit(StreamRequest(spikes=_train(0.3, 0), num_steps=0))
+    with pytest.raises(ValueError, match="num_steps"):
+        eng.submit(StreamRequest(spikes=_train(0.3, 0), num_steps=-3))
+    # None still defaults to cfg.num_steps
+    rid = eng.submit(StreamRequest(spikes=_train(0.3, 0), num_steps=None))
+    res = eng.drain()
+    assert [r.request_id for r in res] == [rid]
+    assert res[0].steps == CFG.num_steps
+
+
+def test_submit_validates_shapes_early():
+    """Bad requests fail at submit(), not rounds later inside poll()."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1)
+    with pytest.raises(ValueError, match="image shape"):
+        eng.submit(StreamRequest(image=np.zeros(5, np.float32)))
+    with pytest.raises(ValueError, match="spikes shape"):
+        eng.submit(StreamRequest(spikes=np.zeros((3, 3), np.float32)))
+    with pytest.raises(ValueError, match="image or spikes"):
+        eng.submit(StreamRequest())
+    assert eng.idle()  # nothing bad was enqueued
+
+
+def test_mid_flight_admission_matches_batch_oracle():
+    """Requests submitted while chunks are in flight get the same
+    per-request results as the batch oracle."""
+    params = _params()
+    trains = [_train(0.25, s) for s in range(5)]
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5)
+    for t in trains[:2]:
+        eng.submit(StreamRequest(spikes=t))
+    results = []
+    results += eng.poll()  # 2 slots mid-window ...
+    results += eng.poll()
+    for t in trains[2:]:  # ... when three more arrive
+        eng.submit(StreamRequest(spikes=t))
+    results += eng.drain()
+    assert sorted(r.request_id for r in results) == list(range(5))
+    for r in results:
+        counts, ev = _oracle(params, trains[r.request_id])
+        np.testing.assert_allclose(r.spike_counts, counts)
+        np.testing.assert_allclose(r.events_per_layer, ev)
+        assert r.queue_wait_s >= 0.0
+        assert r.latency_s >= r.queue_wait_s
+
+
+def test_edf_admission_under_contention():
+    """With one slot, queued requests are admitted earliest-deadline-first
+    (deadline-less requests last, FIFO within a class)."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1,
+                          chunk_steps=CFG.num_steps)
+    t = _train(0.2, 0)
+    eng.submit(StreamRequest(spikes=t))                  # rid 0: no deadline
+    eng.submit(StreamRequest(spikes=t, deadline_s=100))  # rid 1
+    eng.submit(StreamRequest(spikes=t, deadline_s=10))   # rid 2
+    eng.submit(StreamRequest(spikes=t, deadline_s=50))   # rid 3
+    done = eng.drain()  # one request completes per poll (chunk == window)
+    assert [r.request_id for r in done] == [2, 3, 1, 0]
+
+
+def test_priority_overrides_deadline_order():
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1,
+                          chunk_steps=CFG.num_steps)
+    t = _train(0.2, 0)
+    eng.submit(StreamRequest(spikes=t, deadline_s=1.0))       # rid 0, prio 0
+    eng.submit(StreamRequest(spikes=t, priority=5))           # rid 1
+    eng.submit(StreamRequest(spikes=t, deadline_s=2.0, priority=5))  # rid 2
+    done = eng.drain()
+    # priority class first; EDF inside the class, deadline-less last
+    assert [r.request_id for r in done] == [2, 1, 0]
+
+
+def test_deadline_miss_accounting():
+    eng = SNNStreamEngine(_params(), CFG, num_slots=2, chunk_steps=5)
+    t = _train(0.2, 0)
+    eng.submit(StreamRequest(spikes=t, deadline_s=0.0))   # already due
+    eng.submit(StreamRequest(spikes=t, deadline_s=1e4))   # generous
+    eng.submit(StreamRequest(spikes=t))                   # no deadline
+    done = eng.drain()
+    by_id = {r.request_id: r for r in done}
+    assert by_id[0].deadline_missed and by_id[0].deadline_s == 0.0
+    assert not by_id[1].deadline_missed
+    assert not by_id[2].deadline_missed and by_id[2].deadline_s is None
+    assert eng.completed == 3 and eng.deadline_misses == 1
+    assert eng.deadline_miss_rate() == pytest.approx(1 / 3)
+
+
+def test_in_jit_slot_reset_isolates_sequential_admits():
+    """The admit-mask reset inside the jitted chunk must give every
+    request fresh state, including back-to-back reuse of one slot."""
+    params = _params()
+    probe = _train(0.3, 42)
+    solo, _ = _oracle(params, probe)
+    eng = SNNStreamEngine(params, CFG, num_slots=1, chunk_steps=5)
+    # busy request first, then the probe lands on the same (dirty) slot,
+    # twice — with a second episode in between
+    first = eng.run([StreamRequest(spikes=_train(0.9, 1)),
+                     StreamRequest(spikes=probe)])
+    np.testing.assert_allclose(first[1].spike_counts, solo)
+    again = eng.run([StreamRequest(spikes=probe)])
+    np.testing.assert_allclose(again[0].spike_counts, solo)
+
+
+def test_events_per_sec_mid_episode():
+    """Mid-episode reads must use the episode clock, not the previous
+    episode's wall time (counters and denominator move together)."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1, chunk_steps=5)
+    eng.run([StreamRequest(spikes=_train(0.5, 0))])
+    finished_rate = eng.events_per_sec()
+    assert finished_rate > 0 and eng.wall_s > 0
+    # new episode: counters reset at submit, mid-flight read is coherent
+    eng.submit(StreamRequest(spikes=_train(0.5, 1)))
+    eng.poll()  # one chunk of four: episode still open
+    assert not eng.idle()
+    mid = eng.events_per_sec()
+    assert 0 < mid < np.inf
+    assert eng.total_events < _train(0.5, 1).size  # episode-local numerator
+    eng.drain()
+    assert eng.events_per_sec() > 0
+
+
+def test_submit_drain_equals_run():
+    params = _params()
+    trains = [_train(0.3, s) for s in range(4)]
+    a = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=7).run(
+        [StreamRequest(spikes=t) for t in trains]
+    )
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=7)
+    for t in trains:
+        eng.submit(StreamRequest(spikes=t))
+    b = sorted(eng.drain(), key=lambda r: r.request_id)
+    for ra, rb in zip(a, b):
+        np.testing.assert_allclose(ra.spike_counts, rb.spike_counts)
+        np.testing.assert_allclose(ra.events_per_layer, rb.events_per_layer)
+        assert ra.prediction == rb.prediction
+
+
+# ---------------------------------------- acceptance: collision config
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_collision_config_parity_with_batch_oracle(backend):
+    """Acceptance: on the paper's 4096-512-2 config, the async engine's
+    predictions/energy match the batch-oracle event forward under
+    mid-flight admission — for both the jnp and the fused (interpret on
+    CPU) chunk backends."""
+    from repro.configs.collision_snn import CONFIG
+
+    cfg = dataclasses.replace(CONFIG, num_steps=8)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    trains = [
+        (rng.random((cfg.num_steps, cfg.layer_sizes[0])) < 0.2).astype(
+            np.float32
+        )
+        for _ in range(3)
+    ]
+    eng = SNNStreamEngine(params, cfg, num_slots=2, chunk_steps=3,
+                          backend=backend)
+    eng.submit(StreamRequest(spikes=trains[0], deadline_s=1e4))
+    eng.submit(StreamRequest(spikes=trains[1]))
+    results = eng.poll()  # mid-flight ...
+    eng.submit(StreamRequest(spikes=trains[2], deadline_s=1e4))
+    results += eng.drain()
+    assert sorted(r.request_id for r in results) == [0, 1, 2]
+    for r in results:
+        out_mem, out_spikes, ev = runtime.event_forward(
+            params, jnp.asarray(trains[r.request_id])[:, None, :], cfg
+        )
+        counts = np.asarray(out_spikes.sum(0))[0]
+        memsum = np.asarray(out_mem.sum(0))[0]
+        ev = np.asarray(ev)[:, 0]
+        np.testing.assert_allclose(r.spike_counts, counts)
+        np.testing.assert_allclose(r.events_per_layer, ev)
+        # the engine's tie-break rule, applied to the oracle traces
+        assert r.prediction == int(np.argmax(counts + 1e-6 * memsum))
+        oc = energy.snn_ops_from_events(
+            cfg.layer_sizes, cfg.num_steps, ev, neuron_kind=cfg.neuron_kind
+        )
+        assert r.energy_pj == pytest.approx(oc.energy_pj())
+        assert not r.deadline_missed

@@ -1,0 +1,61 @@
+"""Mesh-sharded slot axis of the SNN stream engine (subprocess: needs >1
+device).  Parity with the unsharded engine over a 2-device CPU mesh, plus
+the loud misconfiguration error for non-divisible slot counts."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, numpy as np
+    from repro.core import snn
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    cfg = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=12)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    trains = [(rng.random((12, 64)) < 0.3).astype(np.float32)
+              for _ in range(5)]
+    reqs = lambda: [StreamRequest(spikes=t, deadline_s=1e4) for t in trains]
+    mesh = jax.make_mesh((2,), ("data",))
+
+    ref = SNNStreamEngine(params, cfg, num_slots=2, chunk_steps=5).run(reqs())
+    shr = SNNStreamEngine(params, cfg, num_slots=2, chunk_steps=5,
+                          mesh=mesh).run(reqs())
+    for a, b in zip(ref, shr):
+        np.testing.assert_allclose(a.spike_counts, b.spike_counts)
+        np.testing.assert_allclose(a.events_per_layer, b.events_per_layer)
+        assert a.prediction == b.prediction
+        assert not b.deadline_missed
+
+    # slot counts that don't divide over the mesh fail loudly, not silently
+    try:
+        SNNStreamEngine(params, cfg, num_slots=3, chunk_steps=5, mesh=mesh)
+    except ValueError as e:
+        assert "num_slots" in str(e)
+    else:
+        raise AssertionError("non-divisible num_slots did not raise")
+    print("SHARDED_SNN_OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_slots_match_unsharded():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True, text=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, timeout=600,
+    )
+    assert "SHARDED_SNN_OK" in r.stdout, r.stdout + r.stderr
