@@ -14,6 +14,12 @@ same run:
     (``kernels.snn_chunk``) — Mosaic on TPU, interpret on CPU (recorded
     with its ``pallas_mode`` so numbers are never compared across modes
     silently).
+  - ``serving_resident``: the stream engine's device-resident chunk —
+    event tables staged once at admission, ``dynamic_slice``d per chunk
+    by on-device ``slot_done`` offsets; no per-chunk host assembly, H2D
+    transfer, or layer-0 re-extraction.  The ``host_overhead`` section
+    records what that per-chunk haul used to cost (dense H2D upload +
+    host chunk assembly), measured on this host.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.snn_bench [--quick] [--json PATH]
@@ -47,14 +53,17 @@ DEFAULT_JSON = REPO_ROOT / "BENCH_snn.json"
 SCHEMA = "bench_snn/v1"
 
 REQUIRED_TOP = ("schema", "backend", "mode", "config", "capacity_plan",
-                "paths", "step_events_us", "speedup")
-REQUIRED_PATHS = ("baseline_pr2_jnp", "overhauled_jnp", "fused")
+                "paths", "step_events_us", "host_overhead", "speedup")
+REQUIRED_PATHS = ("baseline_pr2_jnp", "overhauled_jnp", "fused",
+                  "serving_resident")
 REQUIRED_PATH_KEYS = ("us_per_chunk", "steps_per_s", "events_per_s")
 REQUIRED_SPEEDUP = (
     "fused_vs_baseline_steps_per_s",
     "overhauled_jnp_vs_baseline_steps_per_s",
+    "serving_resident_vs_overhauled_steps_per_s",
     "selected_vs_baseline_steps_per_s",
 )
+REQUIRED_HOST_OVERHEAD = ("dense_chunk_h2d_us", "host_assembly_us")
 
 
 def _baseline_chunk(params, states, spikes, cfg: snn.SNNConfig):
@@ -82,6 +91,26 @@ def _baseline_chunk(params, states, spikes, cfg: snn.SNNConfig):
 
     fin, (m, s, e) = jax.lax.scan(step, tuple(states), spikes)
     return list(fin), m, s, e
+
+
+def _time_host_assembly(trains, Tc: int, iters: int = 5) -> float:
+    """Median microseconds to rebuild one dense (Tc, B, K) chunk on the
+    host from per-request trains — the per-tick python loop the resident
+    engine deleted (timed host-only; the H2D upload is timed apart)."""
+    import time as _time
+
+    B, K = len(trains), trains[0].shape[1]
+    times = []
+    for it in range(iters):
+        d = (it * Tc) % max(trains[0].shape[0] - Tc, 1)
+        t0 = _time.perf_counter()
+        chunk = np.zeros((Tc, B, K), np.float32)
+        for s, tr in enumerate(trains):
+            take = min(Tc, tr.shape[0] - d)
+            chunk[:take, s] = tr[d : d + take]
+        times.append(_time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
 
 
 def _path_stats(us_per_chunk: float, chunk_steps: int, batch: int,
@@ -145,6 +174,28 @@ def run(quick: bool = False, json_path: Optional[Path] = None) -> Dict:
     t_over = time_fn(over_j, states, chunk, warmup=warm, iters=iters)
     t_fused = time_fn(fused_j, states, chunk, warmup=warm, iters=iters)
 
+    # serving-resident path: the stream engine's compiled chunk over
+    # device-staged event rings (same geometry/capacities), plus the
+    # host-overhead costs it deletes — the dense per-chunk H2D upload
+    # and the host-side chunk assembly loop of the pre-residency tick
+    from repro.serving.snn_engine import SNNStreamEngine
+
+    engine = SNNStreamEngine(
+        params, cfg, num_slots=B, chunk_steps=Tc, backend="jnp",
+        capacities=plan.capacities,
+    )
+    trains = [np.asarray(spikes_full[:, b, :]) for b in range(B)]
+    staged = engine.staged_chunk_args(trains)
+    t_resident = time_fn(
+        engine.chunk_for_timing(), *staged, warmup=warm, iters=iters
+    )
+
+    chunk_np = np.asarray(chunk)
+    t_h2d = time_fn(
+        lambda: jax.device_put(chunk_np), warmup=warm, iters=iters
+    )
+    t_assembly = _time_host_assembly(trains, Tc, iters=max(iters, 3))
+
     # event-extraction microbenchmark: the O(K log K) -> O(K) rewrite
     plane = chunk[0]
     t_argsort = time_fn(
@@ -170,6 +221,11 @@ def run(quick: bool = False, json_path: Optional[Path] = None) -> Dict:
             pallas_mode="mosaic" if on_tpu else "interpret",
             detail="kernels.snn_chunk single-invocation chunk",
         ),
+        "serving_resident": _path_stats(
+            t_resident, Tc, B, events_per_chunk,
+            detail="engine ring-sliced pre-staged events: no per-chunk "
+                   "assembly/H2D/extraction",
+        ),
     }
     # the path backend="auto" actually selects on this host
     selected = "fused" if on_tpu else "overhauled_jnp"
@@ -189,6 +245,21 @@ def run(quick: bool = False, json_path: Optional[Path] = None) -> Dict:
         "capacity_plan": plan.as_dict(),
         "paths": paths,
         "step_events_us": {"argsort": t_argsort, "cumsum_scatter": t_cumsum},
+        # what the pre-residency tick paid per chunk on top of compute:
+        # host-assembling the dense (Tc, B, K) plane and shipping it H2D
+        "host_overhead": {
+            "dense_chunk_h2d_us": t_h2d,
+            "host_assembly_us": t_assembly,
+            "dense_chunk_bytes": int(chunk_np.nbytes),
+            # from the engine's actual staged dtypes (addr width depends
+            # on fan-in) incl. the per-step counts lane
+            "resident_chunk_bytes": int(
+                Tc * B * plan.capacities[0]
+                * (staged[2]["addrs"].dtype.itemsize
+                   + staged[2]["values"].dtype.itemsize)
+                + Tc * B * staged[2]["counts"].dtype.itemsize
+            ),
+        },
         "speedup": {
             "fused_vs_baseline_steps_per_s": (
                 paths["fused"]["steps_per_s"]
@@ -197,6 +268,10 @@ def run(quick: bool = False, json_path: Optional[Path] = None) -> Dict:
             "overhauled_jnp_vs_baseline_steps_per_s": (
                 paths["overhauled_jnp"]["steps_per_s"]
                 / paths["baseline_pr2_jnp"]["steps_per_s"]
+            ),
+            "serving_resident_vs_overhauled_steps_per_s": (
+                paths["serving_resident"]["steps_per_s"]
+                / paths["overhauled_jnp"]["steps_per_s"]
             ),
             "selected_path": selected,
             "selected_vs_baseline_steps_per_s": (
@@ -250,6 +325,11 @@ def validate(path: Path) -> List[str]:
         v = speedup.get(k)
         if not isinstance(v, (int, float)) or not v > 0:
             errors.append(f"speedup.{k} not a positive number: {v!r}")
+    host = doc.get("host_overhead", {})
+    for k in REQUIRED_HOST_OVERHEAD:
+        v = host.get(k)
+        if not isinstance(v, (int, float)) or not v > 0:
+            errors.append(f"host_overhead.{k} not a positive number: {v!r}")
     caps = doc.get("capacity_plan", {}).get("capacities")
     if not (isinstance(caps, list) and caps
             and all(isinstance(c, int) and c >= 1 for c in caps)):

@@ -54,6 +54,10 @@ DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
     "act_seq": (),  # set to ("data",) for sequence-parallel profiles
     "embed_act": (),  # activation feature dim stays replicated
     "cap": (),  # MoE expert-capacity dim
+    # streaming-SNN serving dims (serving/snn_engine device-resident state)
+    "slot": ("pod", "data"),  # engine micro-batch slot axis (like batch)
+    "ring_steps": (),  # per-slot event-ring time axis: stays with its slot
+    "event_cap": (),  # packed per-step event-list capacity: replicated
 }
 
 
@@ -159,6 +163,29 @@ def shard_map_unchecked(fn, mesh: Mesh, *, in_specs, out_specs):
     return _shard_map(
         fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **_CHECK_KW
     )
+
+
+def slot_axis(num_slots: int, mesh: Mesh,
+              rules: Optional[PartitionRules] = None):
+    """Mesh axes the serving engine's slot dimension shards over.
+
+    Everything slot-indexed in the stream engine — neuron states, the
+    per-slot event ring buffers ((S, ring_steps, event_cap), via the
+    ``slot``/``ring_steps``/``event_cap`` rules), scheduling metadata and
+    the per-chunk stats — shards along this one axis; a ``P(slot_axis)``
+    pytree *prefix* therefore covers all of them.  Raises loudly when
+    ``num_slots`` does not divide the mesh's slot axes: a silently
+    replicated slot axis would run every slot on every device, which is
+    exactly the misconfiguration sharded serving exists to avoid.
+    """
+    spec = spec_for((num_slots,), ("slot",), mesh, rules)
+    if len(spec) == 0 or spec[0] is None:
+        raise ValueError(
+            f"num_slots={num_slots} is not shardable over mesh axes "
+            f"{dict(zip(mesh.axis_names, mesh.devices.shape))}; pick a "
+            f"slot count divisible by the mesh's batch axes"
+        )
+    return spec[0]
 
 
 # ------------------------------------------------- activation constraints

@@ -160,6 +160,75 @@ def merge(
 
 
 # --------------------------------------------------------------------------
+# Packed per-step event tables (device-resident staging format)
+# --------------------------------------------------------------------------
+
+
+class StepEventTable(NamedTuple):
+    """Packed per-step AER event lists of a dense spike train.
+
+    Where ``EventStream`` is one flat time-sorted list (the bus/wire
+    format), this is the *compute-staged* layout the chunk runtime
+    consumes: one fixed-capacity, valid-first event list per time step, so
+    a ``dynamic_slice`` over the step axis yields a chunk's worth of
+    ready-to-gather events with no re-extraction and no densification.
+    The serving engine stages every admitted request in this format, in
+    device memory, for the request's whole lifetime.
+
+    addrs:  (..., T, C) int16/int32 — event addresses, packed valid-first
+            (int16 when the address space fits: ~5x smaller than the
+            dense float32 plane at the collision config's autotuned
+            capacity, tighter still under lower-percentile plans)
+    values: (..., T, C) int8 — signed spike magnitudes (0 on padding).
+            Spike trains are integer-valued by construction ({0,1} rate /
+            TTFS codes, {-1,0,1} delta/DVS polarities).
+    counts: (..., T) int32 — valid events per step
+    """
+
+    addrs: Array
+    values: Array
+    counts: Array
+
+    @property
+    def capacity(self) -> int:
+        return self.addrs.shape[-1]
+
+    @property
+    def num_steps(self) -> int:
+        return self.addrs.shape[-2]
+
+
+def addr_dtype_for(num_addrs: int):
+    """Narrowest integer dtype that can index ``num_addrs`` addresses."""
+    return jnp.int16 if num_addrs <= jnp.iinfo(jnp.int16).max else jnp.int32
+
+
+def step_table_to_dense(table: StepEventTable, num_addrs: int) -> Array:
+    """Scatter a per-step event table back to a dense (..., T, N) train.
+
+    Test/debug inverse of ``events.runtime.encode_step_table``; lossless
+    whenever the capacity covered each step's events at encode time.
+    """
+    C = table.capacity
+    valid = (
+        jnp.arange(C, dtype=jnp.int32) < table.counts[..., None]
+    )
+    idx = jnp.where(valid, table.addrs.astype(jnp.int32), num_addrs)
+    vals = jnp.where(valid, table.values.astype(jnp.float32), 0.0)
+    lead = table.addrs.shape[:-1]
+    flat_idx = idx.reshape(-1, C)
+    flat_val = vals.reshape(-1, C)
+
+    def row(i, v):
+        return jnp.zeros((num_addrs,), jnp.float32).at[i].add(
+            v, mode="drop"
+        )
+
+    dense = jax.vmap(row)(flat_idx, flat_val)
+    return dense.reshape(lead + (num_addrs,))
+
+
+# --------------------------------------------------------------------------
 # Polarity-aware input planes (ON/OFF channels of a DVS stream)
 # --------------------------------------------------------------------------
 

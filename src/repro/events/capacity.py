@@ -43,10 +43,26 @@ from repro.events import runtime
 
 __all__ = [
     "CapacityPlan",
+    "input_capacity",
     "measure_step_counts",
     "autotune",
     "truncation_report",
 ]
+
+
+def input_capacity(
+    cfg: snn.SNNConfig, capacities: Optional[Sequence[int]] = None
+) -> int:
+    """Layer-0 per-step event-list capacity for staging resident inputs.
+
+    The serving engine's device ring buffers are sized by this: the tuned
+    layer-0 capacity when a plan is in force (``CapacityPlan.capacities``
+    or an explicit tuple), full fan-in otherwise.  Validated the same way
+    ``runtime.run_chunk`` validates its ``capacities`` argument, so a
+    plan that would be rejected at chunk time fails at engine init
+    instead.
+    """
+    return runtime._resolve_capacities(cfg, capacities)[0]
 
 
 @dataclasses.dataclass(frozen=True)

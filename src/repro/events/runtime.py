@@ -129,6 +129,31 @@ def gather_current(
     return acc + b[None, :]
 
 
+def encode_step_table(
+    spikes: Array,  # (..., T, K) dense spike train, integer-valued
+    capacity: int,
+    *,
+    addr_dtype=None,
+) -> aer.StepEventTable:
+    """Compress a dense spike train into a packed per-step event table.
+
+    One ``step_events`` pass over every step at once (the extraction is
+    per-step independent, so slicing the table at step ``d`` is bitwise
+    identical to extracting ``spikes[d]`` on the fly — the property the
+    serving engine's ring-buffer residency rests on).  Values are stored
+    as int8 signed magnitudes: spike trains are integer-valued by
+    construction, and the engine validates that at submit.
+    """
+    addrs, values, counts = step_events(spikes, capacity)
+    if addr_dtype is None:
+        addr_dtype = aer.addr_dtype_for(spikes.shape[-1])
+    return aer.StepEventTable(
+        addrs=addrs.astype(addr_dtype),
+        values=values.astype(jnp.int8),
+        counts=counts.astype(jnp.int32),
+    )
+
+
 # --------------------------------------------------------------------------
 # Stateful chunk runner (shared by event_forward and the serving engine)
 # --------------------------------------------------------------------------
@@ -198,11 +223,79 @@ def run_chunk(
     CPU (where the fused kernel would run interpreted).  The fused path
     applies ``capacities[0]`` to the input event list; hidden layers run
     as gated in-VMEM matvecs and never truncate.
+
+    Layer-0 events are extracted *once* for the whole chunk (vectorized
+    over steps — ``step_events`` is per-step independent) and handed to
+    ``run_chunk_events``; callers that already hold packed event tables
+    (the device-resident serving engine) skip this entry point entirely.
+    """
+    B = spikes.shape[1]
+    p = params if prepared else prepare_params(params, cfg)
+    act = (
+        jnp.ones((B,), jnp.float32)
+        if active is None
+        else active.astype(jnp.float32)
+    )
+    caps = _resolve_capacities(cfg, capacities)
+    # silence frozen slots before extraction so their (ignored) event
+    # tables cost nothing downstream and counts match across backends
+    addrs, values, counts = step_events(
+        spikes * act[None, :, None], caps[0]
+    )
+    return run_chunk_events(
+        p,
+        states,
+        addrs,
+        values,
+        counts,
+        cfg,
+        active=act,
+        capacities=caps,
+        prepared=True,
+        backend=backend,
+        interpret=interpret,
+    )
+
+
+def run_chunk_events(
+    params: Dict[str, Dict[str, Array]],
+    states: List[neuron.NeuronState],
+    addrs: Array,  # (Tc, B, C) int — layer-0 event addresses, valid-first
+    values: Array,  # (Tc, B, C) — signed event values (0 = padding)
+    counts: Array,  # (Tc, B) int — valid events per step
+    cfg: snn.SNNConfig,
+    *,
+    active: Optional[Array] = None,  # (B,) mask; inactive rows are frozen
+    capacities: Optional[Sequence[int]] = None,
+    prepared: bool = False,
+    backend: str = "jnp",
+    interpret: Optional[bool] = None,
+    layout: str = "time_major",  # "time_major" (Tc,B,C) | "slot_major" (B,Tc,C)
+) -> Tuple[List[neuron.NeuronState], Array, Array, Array]:
+    """``run_chunk`` over a *pre-extracted* layer-0 event table.
+
+    The serving hot path: the engine stages each request's events in a
+    device-resident ring at admission and slices the next ``Tc`` steps per
+    chunk — this entry consumes those slices directly instead of
+    re-running ``step_events`` on a dense layer-0 plane every chunk.
+    Event lists must be packed valid-first with zero values on padding
+    (what ``step_events``/``encode_step_table`` produce), already
+    truncated to ``capacities[0]``, and silenced (zero values/counts) on
+    frozen or out-of-window steps.  ``layout="slot_major"`` accepts the
+    ring's native (B, Tc, C) layout without a host-side transpose.
+
+    Returns the ``run_chunk`` tuple: (new_states, out_mem, out_spikes,
+    events (Tc, n_layers, B)).
     """
     ncfg = cfg.neuron_cfg
     p = params if prepared else prepare_params(params, cfg)
     n_layers = cfg.num_layers
-    B = spikes.shape[1]
+    if layout == "slot_major":
+        B = addrs.shape[0]
+    elif layout == "time_major":
+        B = addrs.shape[1]
+    else:
+        raise ValueError(f"unknown event layout {layout!r}")
     act = (
         jnp.ones((B,), jnp.float32)
         if active is None
@@ -215,17 +308,34 @@ def run_chunk(
 
         backend = "fused" if _ops.on_tpu() else "jnp"
     if backend == "fused":
-        return _run_chunk_fused(p, states, spikes, cfg, act, caps, interpret)
+        return _run_chunk_fused(
+            p, states, addrs, values, counts, cfg, act, caps, interpret,
+            layout=layout,
+        )
     if backend != "jnp":
         raise ValueError(f"unknown run_chunk backend {backend!r}")
 
-    def step(states, x_t):
+    if layout == "slot_major":
+        addrs = jnp.swapaxes(addrs, 0, 1)
+        values = jnp.swapaxes(values, 0, 1)
+        counts = jnp.swapaxes(counts, 0, 1)
+
+    def step(states, xs):
+        a_t, v_t, c_t = xs
         new_states, ev_t = [], []
-        h = x_t * act[:, None]
+        h = None
         for i in range(n_layers):
             lp = p[f"layer{i}"]
-            addrs, values, count = step_events(h, caps[i])
-            cur = gather_current(lp["w"], lp["b"], addrs, values)
+            if i == 0:
+                cur = gather_current(
+                    lp["w"], lp["b"], a_t.astype(jnp.int32),
+                    v_t.astype(jnp.float32),
+                )
+                count = c_t.astype(jnp.float32)
+            else:
+                a_i, v_i, c_i = step_events(h, caps[i])
+                cur = gather_current(lp["w"], lp["b"], a_i, v_i)
+                count = c_i.astype(jnp.float32)
             st, spk = neuron.neuron_step(
                 ncfg,
                 states[i],
@@ -242,13 +352,13 @@ def run_chunk(
             )
             spk = spk * act[:, None]
             new_states.append(st)
-            ev_t.append(count.astype(jnp.float32))
+            ev_t.append(count)
             h = spk
         out_mem_t = new_states[-1].u
         return tuple(new_states), (out_mem_t, h, jnp.stack(ev_t))
 
     fin_states, (out_mem, out_spikes, events) = jax.lax.scan(
-        step, tuple(states), spikes
+        step, tuple(states), (addrs, values, counts)
     )
     return list(fin_states), out_mem, out_spikes, events
 
@@ -269,12 +379,13 @@ def _resolve_capacities(
 
 
 def _run_chunk_fused(
-    p, states, spikes, cfg: snn.SNNConfig, act, caps, interpret
+    p, states, addrs, values, counts, cfg: snn.SNNConfig, act, caps,
+    interpret, *, layout: str = "time_major",
 ):
     """Dispatch one chunk to the fused Pallas kernel.
 
-    Event extraction (the new O(K) ``step_events``) happens here; the
-    kernel consumes packed valid-first event tables via scalar prefetch.
+    The kernel consumes packed valid-first event tables via scalar
+    prefetch — exactly the staged format, so no extraction happens here.
     """
     from repro.kernels import ops
 
@@ -293,9 +404,6 @@ def _run_chunk_fused(
                 f"Use full fan-in hidden capacities (autotune(..., "
                 f"tune_hidden=False)) or backend='jnp'."
             )
-    # silence frozen slots before extraction so their (ignored) event
-    # tables cost nothing downstream and counts match the jnp path
-    addrs, values, counts = step_events(spikes * act[None, :, None], caps[0])
     layers = [p[f"layer{i}"] for i in range(L)]
     mem, spk, events, u_fin, r_fin = ops.snn_chunk(
         tuple(lp["w"] for lp in layers),
@@ -313,6 +421,7 @@ def _run_chunk_fused(
         kind=ncfg.kind,
         lapicque_gain=ncfg.lapicque_gain,
         interpret=interpret,
+        layout=layout,
     )
     new_states = [
         neuron.NeuronState(u=u, refrac=r) for u, r in zip(u_fin, r_fin)

@@ -96,6 +96,7 @@ def snn_chunk(
     kind: str = "lif",
     lapicque_gain: float = 1.0,
     interpret=None,
+    layout: str = "time_major",
 ):
     """Fused multi-timestep, multi-layer event-driven SNN chunk.
 
@@ -103,7 +104,9 @@ def snn_chunk(
     weight-row gathers driven by scalar-prefetched event lists (gated per
     E-block on a non-silent predicate), membranes + refractory counters
     resident in VMEM scratch across all steps, hidden layers as gated
-    in-VMEM matvecs.  See ``kernels.snn_chunk`` for the full contract.
+    in-VMEM matvecs.  ``layout="slot_major"`` consumes (B, Tc, C) tables
+    (the serving engine's device-resident ring layout) transpose-free.
+    See ``kernels.snn_chunk`` for the full contract.
     """
     return _chunk.snn_chunk(
         weights,
@@ -121,6 +124,7 @@ def snn_chunk(
         kind=kind,
         lapicque_gain=lapicque_gain,
         interpret=(not on_tpu()) if interpret is None else interpret,
+        layout=layout,
     )
 
 

@@ -215,6 +215,7 @@ def _chunk_kernel(
         "lapicque_gain",
         "block_e",
         "interpret",
+        "layout",
     ),
 )
 def snn_chunk(
@@ -224,9 +225,9 @@ def snn_chunk(
     thresholds: Sequence[Array],  # L x (N_i,) f32
     u0: Sequence[Array],  # L x (B, N_i) f32 incoming membranes
     r0: Sequence[Array],  # L x (B, N_i) i32 incoming refractory
-    addrs: Array,  # (Tc, B, C) int32 layer-0 event addresses
-    values: Array,  # (Tc, B, C) f32 signed event values (0 = pad)
-    counts: Array,  # (Tc, B) int32 valid events per step
+    addrs: Array,  # (Tc, B, C) int layer-0 event addresses
+    values: Array,  # (Tc, B, C) signed event values (0 = pad)
+    counts: Array,  # (Tc, B) int valid events per step
     active: Array,  # (B,) slot mask (nonzero = active)
     *,
     refractory_steps: int = 0,
@@ -235,6 +236,7 @@ def snn_chunk(
     lapicque_gain: float = 1.0,
     block_e: int = 128,
     interpret: bool = False,
+    layout: str = "time_major",
 ) -> Tuple[Array, Array, Array, Tuple[Array, ...], Tuple[Array, ...]]:
     """Run the whole SNN ``Tc`` steps in one kernel launch.
 
@@ -243,17 +245,29 @@ def snn_chunk(
 
     Event lists must be packed valid-first with zero values on padding —
     exactly what ``events.runtime.step_events`` produces; the E-block gate
-    relies on it.
+    relies on it.  Narrow dtypes (int16 addresses, int8 values — the
+    device-resident staging format) are widened here, on device, right
+    before prefetch.  ``layout="slot_major"`` accepts (B, Tc, C) tables —
+    the per-slot ring-buffer layout — and skips the transpose the
+    time-major layout needs to build the flat per-slot prefetch stream.
     """
     L = len(weights)
     assert L <= _EV_PAD, "event-count lane supports at most 128 layers"
-    Tc, B, C = addrs.shape
+    if layout == "slot_major":
+        B, Tc, C = addrs.shape
+    elif layout == "time_major":
+        Tc, B, C = addrs.shape
+    else:
+        raise ValueError(f"unknown event layout {layout!r}")
 
     be = min(block_e, C)
     pc = (-C) % be
     if pc:
-        addrs = jnp.pad(addrs, ((0, 0), (0, 0), (0, pc)))
-        values = jnp.pad(values, ((0, 0), (0, 0), (0, pc)))
+        pad = (
+            ((0, 0), (0, 0), (0, pc))
+        )
+        addrs = jnp.pad(addrs, pad)
+        values = jnp.pad(values, pad)
     Cp = C + pc
 
     outs = [w.shape[1] for w in weights]
@@ -281,11 +295,18 @@ def snn_chunk(
         r0p.append(jnp.pad(r0[i].astype(jnp.int32), ((0, 0), (0, pn))))
 
     # prefetch tables: flat per-slot event streams + per-step counts
-    addrs_f = addrs.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.int32)
-    values_f = (
-        values.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.float32)
-    )
-    counts_f = counts.transpose(1, 0).astype(jnp.int32)
+    if layout == "slot_major":
+        addrs_f = addrs.reshape(B, Tc * Cp).astype(jnp.int32)
+        values_f = values.reshape(B, Tc * Cp).astype(jnp.float32)
+        counts_f = counts.astype(jnp.int32)
+    else:
+        addrs_f = (
+            addrs.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.int32)
+        )
+        values_f = (
+            values.transpose(1, 0, 2).reshape(B, Tc * Cp).astype(jnp.float32)
+        )
+        counts_f = counts.transpose(1, 0).astype(jnp.int32)
     act = (jnp.asarray(active) != 0).astype(jnp.int32)
 
     in_specs = []

@@ -78,6 +78,7 @@ def _serve_snn(args) -> None:
     engine = SNNStreamEngine(
         params, cfg, num_slots=args.batch, chunk_steps=args.chunk_steps,
         seed=1, backend=args.snn_backend,
+        pipeline_depth=0 if args.no_pipeline else 1,
     )
 
     key = jax.random.PRNGKey(2)
@@ -170,6 +171,15 @@ def _serve_snn(args) -> None:
         f"  measured energy/inference: {energy.mean()/1e3:.1f} nJ "
         f"(model estimate from counted events)"
     )
+    tb = engine.tick_breakdown()
+    print(
+        f"  tick breakdown (pipeline_depth={tb['pipeline_depth']}, "
+        f"{tb['ticks']} ticks): host prep {tb['host_prep_us']:.0f} us | "
+        f"dispatch {tb['dispatch_us']:.0f} us | "
+        f"stats fetch {tb['stats_fetch_us']:.0f} us "
+        f"(spike trains stay device-resident; the fetch is the tick's "
+        f"only host transfer)"
+    )
 
 
 def main(argv=None):
@@ -205,6 +215,9 @@ def main(argv=None):
                     choices=["auto", "jnp", "fused"],
                     help="chunk hot path: fused Pallas kernel, jnp "
                          "oracle, or auto (fused on TPU)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="synchronous ticks (disable the one-deep "
+                         "stats-future pipeline; debugging aid)")
     args = ap.parse_args(argv)
 
     if args.snn:

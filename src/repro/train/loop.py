@@ -98,11 +98,18 @@ def make_train_step(
 
 @dataclasses.dataclass
 class StragglerWatchdog:
-    """Per-step wall-time monitor.  On a real pod, a step exceeding
-    `factor` x the running median marks this host a straggler candidate:
-    we log it and (configurably) trigger a checkpoint so the controller
-    can evict/replace the slow node.  Logic is host-side and runs as-is
-    in this container."""
+    """Wall-time monitor over whatever cadence the caller feeds it.
+    An observation exceeding `factor` x the running median marks this
+    host a straggler candidate: we log it and (configurably) trigger a
+    checkpoint so the controller can evict/replace the slow node.
+
+    ``Trainer.run`` feeds it the *mean step time of each sync window*
+    (it only blocks on the device at ``log_every`` boundaries), so a
+    single slow step inside an otherwise-normal window is diluted by
+    the window length and a persistent slowdown is what trips it —
+    shrink ``log_every`` (or ``factor``) when single-step spikes must
+    be caught; `warmup` counts observations, i.e. windows there.
+    Logic is host-side and runs as-is in this container."""
 
     factor: float = 3.0
     warmup: int = 5
@@ -173,29 +180,48 @@ class Trainer:
         log_every: int = 10,
         log_fn=print,
     ) -> Tuple[TrainState, Dict[str, float]]:
+        """Drive ``num_steps`` async-dispatched training steps.
+
+        The host only synchronizes with the device at ``log_every``
+        boundaries (and once at the end): a per-step
+        ``block_until_ready`` — or even an implicit ``int(state.step)``
+        — serializes host and device, so between syncs the loop just
+        enqueues step N+1 while step N executes and the dispatch pipeline
+        stays full.  The straggler watchdog accordingly observes the
+        *mean* step time of each sync window (same warmup/factor
+        semantics; a stuck device still trips it at the next boundary).
+        """
         last_metrics: Dict[str, float] = {}
+        # host-side step counter: int(state.step) forces a device sync,
+        # so derive log/checkpoint boundaries without touching the device
+        step0 = int(state.step)
+        t_window = time.perf_counter()
+        window_steps = 0
         for i in range(num_steps):
             batch = next(batches)
-            t0 = time.perf_counter()
             state, metrics = self.step_fn(state, batch)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
-            warn = self.watchdog.observe(dt)
-            if warn:
-                log_fn(f"[watchdog] {warn}")
-            step_no = int(state.step)
-            if i % log_every == 0 or i == num_steps - 1:
+            window_steps += 1
+            step_no = step0 + i + 1
+            sync = i % log_every == 0 or i == num_steps - 1
+            if sync:
+                jax.block_until_ready(metrics["loss"])
+                dt = (time.perf_counter() - t_window) / window_steps
+                t_window = time.perf_counter()
+                window_steps = 0
+                warn = self.watchdog.observe(dt)
+                if warn:
+                    log_fn(f"[watchdog] {warn}")
                 last_metrics = {
                     k: float(v) for k, v in metrics.items()
                 }
                 log_fn(
                     f"step {step_no}: "
                     + " ".join(f"{k}={v:.4f}" for k, v in last_metrics.items())
-                    + f" ({dt*1e3:.0f} ms)"
+                    + f" ({dt*1e3:.0f} ms/step)"
                 )
             if self.ckpt is not None and step_no % self.ckpt_every == 0:
                 self.ckpt.save(step_no, state)
         if self.ckpt is not None:
-            self.ckpt.save(int(state.step), state)
+            self.ckpt.save(step0 + num_steps, state)
             self.ckpt.wait()
         return state, last_metrics

@@ -257,7 +257,11 @@ def test_events_per_sec_mid_episode():
     assert finished_rate > 0 and eng.wall_s > 0
     # new episode: counters reset at submit, mid-flight read is coherent
     eng.submit(StreamRequest(spikes=_train(0.5, 1)))
-    eng.poll()  # one chunk of four: episode still open
+    # two polls = dispatch chunks 1+2 and retire chunk 1's stats (the
+    # pipelined tick holds one chunk's stats in flight); episode still
+    # open with two chunks of four outstanding
+    eng.poll()
+    eng.poll()
     assert not eng.idle()
     mid = eng.events_per_sec()
     assert 0 < mid < np.inf

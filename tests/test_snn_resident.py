@@ -1,0 +1,231 @@
+"""Device-resident spike residency of the SNN stream engine.
+
+Pins down the two invariants the resident tick loop rests on:
+
+1. **Ring-buffer parity.** Chunks produced by ``dynamic_slice`` over the
+   per-slot event rings (staged once at admission) bit-match the PR-4
+   host-assembled path — dense (Tc, S, K) chunks rebuilt on the host and
+   event-extracted per chunk — across staggered ``slot_done`` offsets
+   (mixed window lengths), mid-flight admits, slot reuse over stale ring
+   contents, ring growth, and both chunk backends.  ``step_events`` is
+   per-step independent, so slicing a staged table at step ``d`` must
+   equal extracting step ``d`` on the fly; these tests fail if that
+   property (or the ring's masking of stale/out-of-window steps) breaks.
+
+2. **Steady-state transfer discipline.** Under
+   ``jax.transfer_guard("disallow")`` a steady-state ``_tick`` performs
+   no implicit transfer at all — scheduling metadata lives on device —
+   and exactly one explicit D2H transfer, the stats fetch.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.events import aer, runtime
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=20)
+
+
+def _params(seed=0):
+    return snn.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _train(rate, seed, T=None):
+    rng = np.random.default_rng(seed)
+    T = T or CFG.num_steps
+    return (rng.random((T, CFG.layer_sizes[0])) < rate).astype(np.float32)
+
+
+def _host_assembly_oracle(params, train, Tc, *, backend="jnp",
+                          capacities=None):
+    """PR-4's serving hot path, verbatim: per chunk, assemble a dense
+    host-side plane from the train at the slot's done offset, upload it,
+    and let ``run_chunk`` re-extract layer-0 events.  Returns the
+    per-request accumulators exactly as the engine builds them (device
+    f32 chunk reductions accumulated in host f64)."""
+    cfg = CFG
+    T = train.shape[0]
+    states = runtime.init_states(cfg, 1)
+    counts = np.zeros(cfg.layer_sizes[-1], np.float64)
+    memsum = np.zeros(cfg.layer_sizes[-1], np.float64)
+    events = np.zeros(cfg.num_layers, np.float64)
+    done = 0
+    while done < T:
+        take = min(Tc, T - done)
+        chunk = np.zeros((Tc, 1, cfg.layer_sizes[0]), np.float32)
+        chunk[:take, 0] = train[done : done + take]
+        states, out_mem, out_spikes, ev = runtime.run_chunk(
+            params,
+            states,
+            jnp.asarray(chunk),
+            cfg,
+            capacities=capacities,
+            backend=backend,
+        )
+        m = (np.arange(Tc) < take).astype(np.float32)
+        counts += np.asarray(
+            jnp.sum(out_spikes * m[:, None, None], axis=0)
+        )[0]
+        memsum += np.asarray(
+            jnp.sum(out_mem * m[:, None, None], axis=0)
+        )[0]
+        events += np.asarray(jnp.sum(ev * m[:, None, None], axis=0))[:, 0]
+        done += take
+    pred = int(np.argmax(counts + 1e-6 * memsum))
+    return counts, events, pred
+
+
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_ring_slices_bitmatch_host_assembly_oracle(backend):
+    """Staggered windows + mid-flight admits + slot reuse: every
+    request's counts/events/prediction bit-match the host-assembly
+    oracle.  Mixed T's stagger the slots' done offsets within one chunk
+    dispatch; the T=9 request reuses a slot whose ring still holds a
+    longer train's tail (stale steps must stay silenced); admits land
+    while other slots are mid-window."""
+    params = _params()
+    Ts = [20, 9, 13, 20, 7, 16]
+    trains = {i: _train(0.25, i, T) for i, T in enumerate(Ts)}
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5,
+                          backend=backend)
+    eng.submit(StreamRequest(spikes=trains[0], num_steps=Ts[0]))
+    eng.submit(StreamRequest(spikes=trains[1], num_steps=Ts[1]))
+    results = eng.poll()  # both slots mid-window ...
+    results += eng.poll()
+    for i in (2, 3):  # ... when more work arrives
+        eng.submit(StreamRequest(spikes=trains[i], num_steps=Ts[i]))
+    results += eng.poll()
+    for i in (4, 5):
+        eng.submit(StreamRequest(spikes=trains[i], num_steps=Ts[i]))
+    results += eng.drain()
+    assert sorted(r.request_id for r in results) == list(range(len(Ts)))
+    for r in results:
+        counts, events, pred = _host_assembly_oracle(
+            params, trains[r.request_id], eng.Tc, backend=backend
+        )
+        np.testing.assert_array_equal(r.spike_counts, counts)
+        np.testing.assert_array_equal(r.events_per_layer, events)
+        assert r.prediction == pred
+
+
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_ring_parity_with_tuned_capacity(backend):
+    """Same parity under a truncating layer-0 capacity: admission-time
+    staging and per-chunk extraction must truncate identically."""
+    params = _params()
+    caps = (32, CFG.layer_sizes[1])  # tight enough to truncate at 25%
+    trains = [_train(0.25, 10 + s) for s in range(3)]
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=7,
+                          backend=backend, capacities=caps)
+    results = eng.run([StreamRequest(spikes=t) for t in trains])
+    for r in results:
+        counts, events, pred = _host_assembly_oracle(
+            params, trains[r.request_id], eng.Tc, backend=backend,
+            capacities=caps,
+        )
+        np.testing.assert_array_equal(r.spike_counts, counts)
+        np.testing.assert_array_equal(r.events_per_layer, events)
+        assert r.prediction == pred
+
+
+def test_ring_grows_for_longer_windows():
+    """A request longer than the allocated ring triggers a one-time
+    device-side reallocation; staged trains in other slots survive and
+    results still bit-match the oracle."""
+    params = _params()
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5)
+    short = _train(0.3, 0)  # T=20 (the initial ring size)
+    long = _train(0.3, 1, T=33)
+    eng.submit(StreamRequest(spikes=short))
+    eng.poll()  # short staged + mid-window when the ring grows
+    eng.submit(StreamRequest(spikes=long, num_steps=33))
+    results = eng.drain()
+    assert eng._ring_steps == 33
+    by_id = {r.request_id: r for r in results}
+    for rid, train in ((0, short), (1, long)):
+        counts, events, pred = _host_assembly_oracle(
+            params, train, eng.Tc
+        )
+        np.testing.assert_array_equal(by_id[rid].spike_counts, counts)
+        np.testing.assert_array_equal(by_id[rid].events_per_layer, events)
+
+
+def test_image_requests_encode_on_device_deterministically():
+    """Rate-coded image requests never build a host-side train; two
+    engines with the same seed must produce identical results (the
+    device-side encode consumes the same PRNG stream)."""
+    img = np.linspace(0, 1, CFG.layer_sizes[0]).astype(np.float32)
+    a = SNNStreamEngine(_params(), CFG, num_slots=1, chunk_steps=5, seed=7)
+    b = SNNStreamEngine(_params(), CFG, num_slots=1, chunk_steps=5, seed=7)
+    ra = a.run([StreamRequest(image=img)])[0]
+    rb = b.run([StreamRequest(image=img)])[0]
+    np.testing.assert_array_equal(ra.spike_counts, rb.spike_counts)
+    np.testing.assert_array_equal(ra.events_per_layer, rb.events_per_layer)
+    assert 0.0 < ra.spike_rate < 1.0
+
+
+def test_non_integer_spike_trains_rejected_at_submit():
+    """The staging format is int8 event magnitudes; a float-valued train
+    must fail loudly at submit, not quantize silently."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1)
+    bad = _train(0.3, 0) * 0.5
+    with pytest.raises(ValueError, match="integer-valued"):
+        eng.submit(StreamRequest(spikes=bad))
+    # signed unit polarities (DVS) are fine
+    signed = _train(0.3, 1) - _train(0.3, 2)
+    eng.submit(StreamRequest(spikes=signed))
+    assert len(eng.drain()) == 1
+
+
+def test_step_table_roundtrip():
+    """encode_step_table <-> step_table_to_dense is lossless at full
+    capacity, int16 addresses and all."""
+    train = _train(0.4, 3)
+    table = runtime.encode_step_table(
+        jnp.asarray(train), CFG.layer_sizes[0]
+    )
+    assert table.addrs.dtype == jnp.int16
+    assert table.values.dtype == jnp.int8
+    dense = np.asarray(
+        aer.step_table_to_dense(table, CFG.layer_sizes[0])
+    )
+    np.testing.assert_array_equal(dense, train)
+
+
+# ------------------------------------------------ transfer discipline
+def test_steady_tick_single_host_transfer(monkeypatch):
+    """Steady-state ``_tick``: zero implicit transfers (everything the
+    chunk consumes is device-resident) and exactly one explicit D2H —
+    the retired chunk's stats fetch.  ``transfer_guard("disallow")``
+    fails the test on any implicit H2D (e.g. a host-assembled chunk or
+    host-side scheduling masks sneaking back in)."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=2, chunk_steps=5,
+                          backend="jnp")
+    for s in range(2):
+        eng.submit(StreamRequest(spikes=_train(0.3, s)))
+    # admission + compile + first dispatch happen outside the guard
+    # (admission legitimately uploads each train once, explicitly)
+    eng.poll()
+
+    fetches = {"n": 0}
+    real_get = jax.device_get
+
+    def counting_get(x):
+        fetches["n"] += 1
+        return real_get(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    with jax.transfer_guard("disallow"):
+        eng.poll()  # steady state: dispatch chunk N+1, retire chunk N
+    assert fetches["n"] == 1
+
+    # and the admission path itself stays guard-clean: uploads are
+    # explicit device_puts, never implicit conversions
+    eng.submit(StreamRequest(spikes=_train(0.3, 9)))
+    with jax.transfer_guard("disallow"):
+        eng.drain()
