@@ -26,9 +26,28 @@ ring-sliced pre-staged event tables, the tick loop's real hot path —
 against the BENCH ``overhauled_jnp`` figure, which still includes
 per-chunk layer-0 extraction; a healthy resident engine therefore sits
 *above* 1.0x, and the validation floor is 0.6x (raised from the
-host-assembly era's 0.35x).  Emits ``stream_bench.json``; ``--validate``
-structurally checks it and fails on a chunk-throughput collapse vs the
-BENCH baseline or missing host-overhead evidence.
+host-assembly era's 0.35x).
+
+Since schema v3 the quick mode also exports the engine's observability
+layer (``repro.obs``):
+
+- per-request **latency / queue-wait / energy histograms** (log-bucket
+  snapshots with p50/p90/p99) straight from the engine's metrics
+  registry, next to the scalar percentiles they replace as evidence;
+- a **dispatch attribution** that splits the tick's dominant
+  ``dispatch_us`` bucket into host-enqueue vs device-compute wait (the
+  blocking probe from ``repro.obs.profiler`` — ROADMAP item 2's open
+  question, answered in-artifact);
+- a measured **instrumentation overhead** bound (per-tick metrics+span
+  recording cost vs the measured tick, asserted < 2% by ``--validate``);
+- sidecar artifacts: the Chrome trace (``*_trace.json``,
+  Perfetto-loadable per-request + tick-phase spans) and the full
+  metrics snapshot (``*_metrics.json``), recorded under ``artifacts``.
+
+Emits ``stream_bench.json``; ``--validate`` structurally checks it (and
+its sidecars) and fails on a chunk-throughput collapse vs the BENCH
+baseline, missing/inconsistent histograms, or instrumentation overhead
+above 2% of a tick.
 
 Usage:  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
         PYTHONPATH=src python -m benchmarks.stream_bench --quick [--json P]
@@ -54,12 +73,23 @@ from repro.core import energy, quant, snn
 from repro.events import capacity as cap_mod
 from repro.events import runtime
 from repro.kernels import ops
+from repro.obs import dispatch_attribution, tick_instrumentation_cost_us
 
 RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
-SCHEMA = "stream_bench/v2"
+SCHEMA = "stream_bench/v3"
+# per-request histograms carried by the v3 schema
+HIST_KEYS = (
+    "engine.request.latency_s",
+    "engine.request.queue_wait_s",
+    "engine.request.energy_pj",
+)
+# per-tick observability recording must stay a rounding error next to
+# the measured tick (acceptance: resident throughput regresses < 2%
+# with instrumentation on)
+MAX_OBS_OVERHEAD_FRAC = 0.02
 # the engine's device-resident chunk skips the per-chunk layer-0
 # extraction BENCH_snn's overhauled_jnp still pays, so a healthy engine
 # sits above 1.0x; the floor catches collapse (a resident path that
@@ -112,9 +142,12 @@ def open_loop_run(
     ]
 
     # warm the compiled chunk so open-loop latencies measure steady
-    # state; drop the warmup's tick timings (first tick pays compile)
+    # state; drop the warmup's tick timings (first tick pays compile),
+    # request histograms, lifetime counters and spans alike
     engine.run([StreamRequest(spikes=trains[0])])
     engine.reset_tick_stats()
+    engine.metrics.reset(prefix="engine.request")
+    engine.trace.clear()
 
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_req))
     results, i = [], 0
@@ -160,6 +193,37 @@ def open_loop_run(
             steps_per_s / ref["paths"]["overhauled_jnp"]["steps_per_s"]
         )
 
+    # dispatch attribution: split the tick's dominant dispatch_us bucket
+    # (time in the chunk call) into host enqueue vs device-compute wait
+    # — the ROADMAP item-2 question, answered with a blocking probe on
+    # the very chunk the cross-check just timed
+    attribution = dispatch_attribution(
+        engine.chunk_for_timing(), *staged,
+        warmup=1, iters=3 if quick else 5,
+    )
+
+    # instrumentation overhead: measured per-tick metrics+span recording
+    # cost (scratch instruments, exact op mix of one tick) against the
+    # run's measured mean tick
+    tb = engine.tick_breakdown()
+    mean_tick_us = (
+        tb["host_prep_us"] + tb["dispatch_us"] + tb["stats_fetch_us"]
+    )
+    obs_us = tick_instrumentation_cost_us(num_slots=slots)
+    obs_overhead = {
+        "per_tick_obs_us": obs_us,
+        "mean_tick_us": mean_tick_us,
+        "overhead_frac": obs_us / max(mean_tick_us, 1e-9),
+    }
+
+    # sidecar artifacts next to the JSON: the Perfetto-loadable span
+    # trace and the full metrics snapshot (CI uploads both)
+    trace_path = json_path.with_name(json_path.stem + "_trace.json")
+    metrics_path = json_path.with_name(json_path.stem + "_metrics.json")
+    engine.export_trace(trace_path)
+    engine.metrics.write_json(metrics_path)
+
+    snap = engine.metrics_snapshot()
     doc = {
         "schema": SCHEMA,
         "mode": "quick" if quick else "full",
@@ -187,13 +251,25 @@ def open_loop_run(
             "steps_per_s": steps_per_s,
             "vs_bench_overhauled_jnp": vs_bench,
         },
+        # per-request histograms straight from the engine's metrics
+        # registry (log buckets, exact count/sum/min/max, approximate
+        # percentiles) — warmup was reset out, so counts == served
+        "histograms": {k: snap[k] for k in HIST_KEYS},
         # measured per-tick breakdown of the open-loop run above — the
         # evidence future PRs read to see where serving time goes.  NB
         # dispatch_us is time *in* the chunk call: with synchronous
         # dispatch (CPU) it includes the device compute wait; host
         # scheduling overhead proper is host_prep_us, and the D2H cost
         # is stats_fetch_us (see SNNStreamEngine.tick_breakdown)
-        "host_overhead": engine.tick_breakdown(),
+        "host_overhead": tb,
+        # the measured split of dispatch_us: host enqueue (the only part
+        # that is actually host overhead) vs device-compute wait
+        "dispatch_attribution": attribution,
+        "obs_overhead": obs_overhead,
+        "artifacts": {
+            "trace": trace_path.name,
+            "metrics": metrics_path.name,
+        },
     }
     json_path.write_text(json.dumps(doc, indent=2) + "\n")
     emit(
@@ -207,6 +283,12 @@ def open_loop_run(
         f"steps_per_s={steps_per_s:.1f};"
         f"vs_bench={vs_bench if vs_bench is None else round(vs_bench, 3)};"
         f"json={json_path}",
+    )
+    emit(
+        "stream_bench/dispatch_attribution", attribution["total_us"],
+        f"host_enqueue_us={attribution['host_enqueue_us']:.0f};"
+        f"device_wait_frac={attribution['device_wait_frac']:.3f};"
+        f"obs_overhead_frac={obs_overhead['overhead_frac']:.5f}",
     )
     return doc
 
@@ -269,6 +351,123 @@ def validate(path: Path) -> List[str]:
             "host_overhead.pipeline_depth != 1 — the open-loop bench "
             "must exercise the pipelined tick"
         )
+    # v3: per-request histograms, internally consistent and covering
+    # every served request
+    hists = doc.get("histograms", {})
+    for key in HIST_KEYS:
+        h = hists.get(key)
+        if not isinstance(h, dict) or h.get("type") != "histogram":
+            errors.append(f"histograms.{key} missing or not a histogram")
+            continue
+        count = h.get("count")
+        if count != served:
+            errors.append(
+                f"histograms.{key}.count {count!r} != served {served!r}"
+            )
+        accounted = (
+            h.get("underflow", 0)
+            + h.get("overflow", 0)
+            + sum(c for _, c in h.get("buckets", []))
+        )
+        if accounted != count:
+            errors.append(
+                f"histograms.{key}: bucket counts sum to {accounted}, "
+                f"count says {count}"
+            )
+        p50, p90, p99 = h.get("p50"), h.get("p90"), h.get("p99")
+        if not all(
+            isinstance(p, (int, float)) and p > 0
+            for p in (p50, p90, p99)
+        ) or not (p50 <= p90 <= p99):
+            errors.append(
+                f"histograms.{key}: percentiles missing or not "
+                f"monotone: p50={p50!r} p90={p90!r} p99={p99!r}"
+            )
+    # v3: measured host-enqueue vs device-wait split of dispatch_us
+    att = doc.get("dispatch_attribution", {})
+    enq, wait, total = (
+        att.get("host_enqueue_us"),
+        att.get("device_wait_us"),
+        att.get("total_us"),
+    )
+    if not isinstance(enq, (int, float)) or not enq > 0:
+        errors.append(f"dispatch_attribution.host_enqueue_us: {enq!r}")
+    if not isinstance(wait, (int, float)) or wait < 0:
+        errors.append(f"dispatch_attribution.device_wait_us: {wait!r}")
+    if (
+        not isinstance(total, (int, float))
+        or not total > 0
+        or abs(total - (enq or 0) - (wait or 0)) > 0.05 * total
+    ):
+        errors.append(
+            f"dispatch_attribution.total_us {total!r} inconsistent with "
+            f"enqueue {enq!r} + wait {wait!r}"
+        )
+    if not isinstance(att.get("verdict"), str):
+        errors.append("dispatch_attribution.verdict missing")
+    # v3: instrumentation must cost < 2% of a measured tick
+    obs = doc.get("obs_overhead", {})
+    frac = obs.get("overhead_frac")
+    if not isinstance(frac, (int, float)) or frac < 0:
+        errors.append(f"obs_overhead.overhead_frac invalid: {frac!r}")
+    elif frac >= MAX_OBS_OVERHEAD_FRAC:
+        errors.append(
+            f"instrumentation overhead {frac:.4f} of a tick >= "
+            f"{MAX_OBS_OVERHEAD_FRAC} budget "
+            f"(per_tick_obs_us={obs.get('per_tick_obs_us')!r})"
+        )
+    # v3: sidecar artifacts exist and are structurally sound
+    arts = doc.get("artifacts", {})
+    base = Path(path).resolve().parent
+    trace_name = arts.get("trace")
+    if not isinstance(trace_name, str):
+        errors.append("artifacts.trace missing")
+    else:
+        errors.extend(_validate_trace_file(base / trace_name))
+    metrics_name = arts.get("metrics")
+    if not isinstance(metrics_name, str):
+        errors.append("artifacts.metrics missing")
+    else:
+        try:
+            msnap = json.loads((base / metrics_name).read_text())
+            missing = [k for k in HIST_KEYS if k not in msnap]
+            if missing:
+                errors.append(
+                    f"metrics snapshot {metrics_name} missing {missing}"
+                )
+        except (OSError, json.JSONDecodeError) as e:
+            errors.append(f"metrics snapshot unreadable: {e}")
+    return errors
+
+
+def _validate_trace_file(path: Path) -> List[str]:
+    """The exported Chrome trace must be loadable and carry both span
+    families (request-lifecycle and tick-phase)."""
+    try:
+        trace = json.loads(Path(path).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"trace artifact unreadable: {e}"]
+    evs = trace.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return ["trace artifact has no traceEvents"]
+    errors = []
+    spans = [e for e in evs if e.get("ph") == "X"]
+    if not spans:
+        errors.append("trace artifact has no complete ('X') spans")
+    if not any(e.get("ph") == "M" for e in evs):
+        errors.append("trace artifact has no thread metadata")
+    names = {e.get("name") for e in spans}
+    for needed in ("chunk", "dispatch", "queue"):
+        if needed not in names:
+            errors.append(f"trace artifact missing {needed!r} spans")
+    bad = [
+        e for e in spans
+        if not isinstance(e.get("ts"), (int, float))
+        or not isinstance(e.get("dur"), (int, float))
+        or e["dur"] < 0
+    ]
+    if bad:
+        errors.append(f"trace artifact has {len(bad)} malformed spans")
     return errors
 
 

@@ -8,7 +8,14 @@ SNN streaming (event-driven, persistent membrane state, measured energy;
 async admission with open-loop Poisson arrivals, deadlines, priorities):
   PYTHONPATH=src python -m repro.launch.serve --snn --requests 16 \
       --batch 4 --chunk-steps 5 --image-hw 32 [--dvs] \
-      [--arrival-rate 20] [--deadline-ms 500]
+      [--arrival-rate 20] [--deadline-ms 500] \
+      [--metrics-json metrics.json] [--trace-out trace.json] \
+      [--profile-ticks 20 --profile-dir /tmp/snn-profile]
+
+Observability (with --snn): ``--metrics-json`` dumps the engine's full
+instrument snapshot, ``--trace-out`` writes per-request + per-tick-phase
+spans as Perfetto-loadable Chrome trace JSON, and ``--profile-ticks N``
+wraps N steady-state ticks in a programmatic ``jax.profiler`` capture.
 """
 
 from __future__ import annotations
@@ -109,6 +116,14 @@ def _serve_snn(args) -> None:
     if deadline_s is not None:
         reqs = [dataclasses.replace(r, deadline_s=deadline_s) for r in reqs]
 
+    profile = None
+    if args.profile_ticks > 0:
+        from repro.obs import profile_ticks
+
+        profile = profile_ticks(
+            engine, args.profile_dir, num_ticks=args.profile_ticks
+        )
+
     t0 = time.time()
     if args.arrival_rate > 0:
         # open-loop: Poisson arrivals at the requested rate, submitted to
@@ -134,14 +149,9 @@ def _serve_snn(args) -> None:
     else:
         results = engine.run(reqs)
     dt = time.time() - t0
-    lat = np.array([r.latency_s for r in results])
-    qwait = np.array([r.queue_wait_s for r in results])
-    energy = np.array([r.energy_pj for r in results])
+    if profile is not None:
+        profile.stop()
     rate = np.array([r.spike_rate for r in results])
-    # aggregate over results, not engine episode counters: an open-loop
-    # trace with arrival gaps longer than the service time spans several
-    # engine episodes, and episode counters reset at each new episode
-    misses = sum(r.deadline_missed for r in results)
     events_total = float(sum(r.events_per_layer.sum() for r in results))
     src = f"dvs-events/{args.polarity}" if args.dvs else "rate-coded"
     loop = (
@@ -154,32 +164,61 @@ def _serve_snn(args) -> None:
         f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots "
         f"({loop})"
     )
+    # report from the metrics snapshot: the engine-lifetime request
+    # histograms and counters span every episode an open-loop trace with
+    # arrival gaps crosses, so both modes read the same instruments
+    snap = engine.metrics_snapshot()
+    lat, qw, en = (
+        snap["engine.request.latency_s"],
+        snap["engine.request.queue_wait_s"],
+        snap["engine.request.energy_pj"],
+    )
+    misses = int(snap["engine.requests.deadline_missed"]["value"])
+    served = int(snap["engine.requests.completed"]["value"])
     print(
-        f"  latency p50/p99: {np.percentile(lat, 50)*1e3:.1f}/"
-        f"{np.percentile(lat, 99)*1e3:.1f} ms | "
-        f"queue wait p50: {np.percentile(qwait, 50)*1e3:.1f} ms | "
+        f"  latency p50/p99: {lat['p50']*1e3:.1f}/{lat['p99']*1e3:.1f} ms"
+        f" | queue wait p50: {qw['p50']*1e3:.1f} ms | "
         f"throughput: {events_total/max(dt, 1e-9):.0f} events/s | "
         f"input rate: {rate.mean():.3f}"
     )
-    if deadline_s is not None:
-        print(
-            f"  deadline {args.deadline_ms:.0f} ms: "
-            f"missed {misses}/{len(results)} "
-            f"({misses/max(len(results), 1):.1%})"
-        )
+    budget = (
+        f"{args.deadline_ms:.0f} ms" if deadline_s is not None else "none"
+    )
     print(
-        f"  measured energy/inference: {energy.mean()/1e3:.1f} nJ "
-        f"(model estimate from counted events)"
+        f"  deadline budget {budget}: missed {misses}/{served} "
+        f"({misses/max(served, 1):.1%})"
+    )
+    print(
+        f"  measured energy/inference: mean {en['mean']/1e3:.1f} nJ, "
+        f"p99 {en['p99']/1e3:.1f} nJ (model estimate from counted events)"
     )
     tb = engine.tick_breakdown()
     print(
         f"  tick breakdown (pipeline_depth={tb['pipeline_depth']}, "
         f"{tb['ticks']} ticks): host prep {tb['host_prep_us']:.0f} us | "
-        f"dispatch {tb['dispatch_us']:.0f} us | "
+        f"dispatch {tb['dispatch_us']:.0f} us "
+        f"(p99 {tb['dispatch_p99_us']:.0f} us) | "
         f"stats fetch {tb['stats_fetch_us']:.0f} us "
         f"(spike trains stay device-resident; the fetch is the tick's "
         f"only host transfer)"
     )
+    if args.metrics_json:
+        engine.metrics.write_json(args.metrics_json)
+        print(f"  metrics snapshot -> {args.metrics_json}")
+    if args.trace_out:
+        engine.export_trace(args.trace_out)
+        print(
+            f"  chrome trace ({len(engine.trace)} spans) -> "
+            f"{args.trace_out} (load in ui.perfetto.dev)"
+        )
+    if profile is not None:
+        if profile.error:
+            print(f"  jax.profiler capture FAILED: {profile.error}")
+        else:
+            print(
+                f"  jax.profiler capture ({args.profile_ticks} "
+                f"steady-state ticks) -> {args.profile_dir}"
+            )
 
 
 def main(argv=None):
@@ -218,6 +257,18 @@ def main(argv=None):
     ap.add_argument("--no-pipeline", action="store_true",
                     help="synchronous ticks (disable the one-deep "
                          "stats-future pipeline; debugging aid)")
+    # observability (with --snn)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine's metrics-registry snapshot "
+                         "(counters/gauges/histograms) to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request + per-tick-phase spans as "
+                         "Chrome trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--profile-ticks", type=int, default=0,
+                    help="capture a jax.profiler trace around N "
+                         "steady-state ticks (0 = off)")
+    ap.add_argument("--profile-dir", default="/tmp/snn-jax-profile",
+                    help="output directory for --profile-ticks")
     args = ap.parse_args(argv)
 
     if args.snn:

@@ -1,0 +1,35 @@
+"""Observability layer: metrics registry, span tracing, tick profiling.
+
+- ``obs.metrics`` — dependency-free counters / gauges / log-bucket
+  histograms behind a ``MetricsRegistry`` (JSON-able snapshots).
+- ``obs.trace`` — bounded ring of completed spans, exported as Chrome
+  trace-event JSON (Perfetto-loadable).
+- ``obs.profiler`` — programmatic ``jax.profiler`` capture around N
+  steady-state engine ticks, plus a blocking probe that splits dispatch
+  time into host-enqueue vs device-compute wait.
+"""
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+)
+from repro.obs.trace import Span, TraceRecorder
+from repro.obs.profiler import (
+    dispatch_attribution,
+    profile_ticks,
+    tick_instrumentation_cost_us,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "TraceRecorder",
+    "dispatch_attribution",
+    "profile_ticks",
+    "tick_instrumentation_cost_us",
+]

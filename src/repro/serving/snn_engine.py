@@ -58,6 +58,18 @@ avoidance — is a latency-critical, always-on workload, so the engine is an
   counts.  A request's energy estimate is priced from the events it
   *actually* generated via ``core.energy.snn_ops_from_events`` — not from
   an assumed spike rate.
+- **Observability.** The engine carries a ``repro.obs`` metrics registry
+  (``engine.metrics``) and span recorder (``engine.trace``) instead of
+  ad-hoc scalar accumulators: per-request latency / queue-wait / energy
+  histograms, episode-scoped counters (events, steps, completions,
+  deadline misses — reset when an episode opens, so nothing goes stale
+  across episodes), per-tick phase histograms, and a span per request
+  lifecycle stage (submit -> queue -> stage -> per-chunk ticks ->
+  complete) plus per-tick host_prep / dispatch / stats_fetch phase spans.
+  ``metrics_snapshot()`` exports JSON-able instrument state;
+  ``export_trace(path)`` writes a Perfetto-loadable Chrome trace.  The
+  recording cost is host-side only (the jitted chunk is untouched) and
+  ``benchmarks/stream_bench.py`` pins it under 2% of a tick.
 """
 
 from __future__ import annotations
@@ -77,6 +89,7 @@ from repro.core import coding, energy, neuron, snn
 from repro.distributed import partitioning
 from repro.events import aer, runtime
 from repro.events import capacity as cap_mod
+from repro.obs import MetricsRegistry, TraceRecorder
 
 Array = jax.Array
 
@@ -136,12 +149,14 @@ class SNNStreamEngine:
         capacities: Optional[Sequence[int]] = None,
         mesh=None,
         pipeline_depth: int = 1,
+        trace_capacity: int = 8192,
     ):
         self.params = params
         self.cfg = cfg
         self.S = num_slots
         self.Tc = chunk_steps
         self._rng = jax.random.PRNGKey(seed)
+        self._make_instruments(trace_capacity)
         # prepare (fake-quantize) once at init — the original loop re-ran
         # the full weight-set quantization inside every chunk execution
         self._prepared = jax.device_put(runtime.prepare_params(params, cfg))
@@ -343,6 +358,60 @@ class SNNStreamEngine:
             k: new[k].at[:, :r_old].set(old[k]) for k in new
         }
 
+    # ----------------------------------------------------- observability
+    def _make_instruments(self, trace_capacity: int) -> None:
+        """Create the engine's metrics registry + span recorder.
+
+        Episode-scoped counters live under ``engine.episode.`` and reset
+        when an episode opens (first submit on an idle engine); request
+        histograms and tick-phase histograms are engine-lifetime (reset
+        them explicitly via ``metrics.reset(prefix=...)`` or
+        ``reset_tick_stats``).
+        """
+        self.metrics = MetricsRegistry()
+        self.trace = TraceRecorder(capacity=trace_capacity)
+        m = self.metrics
+        # episode-scoped (reset at _begin_episode)
+        self._m_events = m.counter("engine.episode.events")
+        self._m_steps = m.counter("engine.episode.steps")
+        self._m_completed = m.counter("engine.episode.completed")
+        self._m_misses = m.counter("engine.episode.deadline_misses")
+        self._m_wall = m.gauge("engine.episode.wall_s")
+        # engine-lifetime request instruments
+        self._m_submitted = m.counter("engine.requests.submitted")
+        self._m_finished = m.counter("engine.requests.completed")
+        self._m_missed_total = m.counter("engine.requests.deadline_missed")
+        self._m_latency = m.histogram(
+            "engine.request.latency_s", lo=1e-6, hi=1e3
+        )
+        self._m_qwait = m.histogram(
+            "engine.request.queue_wait_s", lo=1e-6, hi=1e3
+        )
+        self._m_energy = m.histogram(
+            "engine.request.energy_pj", lo=1.0, hi=1e12
+        )
+        # tick-phase timing (reset via reset_tick_stats)
+        self._m_prep = m.histogram(
+            "engine.tick.host_prep_s", lo=1e-7, hi=10.0
+        )
+        self._m_dispatch = m.histogram(
+            "engine.tick.dispatch_s", lo=1e-7, hi=10.0
+        )
+        self._m_fetch = m.histogram(
+            "engine.tick.stats_fetch_s", lo=1e-7, hi=10.0
+        )
+        self._m_qdepth = m.gauge("engine.queue.depth")
+        self._m_active = m.gauge("engine.slots.active")
+
+    def metrics_snapshot(self) -> Dict[str, Dict]:
+        """JSON-able snapshot of every engine instrument."""
+        return self.metrics.snapshot()
+
+    def export_trace(self, path) -> None:
+        """Write the recorded spans as Chrome trace-event JSON
+        (Perfetto-loadable)."""
+        self.trace.write(path)
+
     # ------------------------------------------------------------- state
     def _reset_all(self) -> None:
         cfg, S = self.cfg, self.S
@@ -372,28 +441,41 @@ class SNNStreamEngine:
         self._next_rid = 0
         self._episode_open = False
         self._episode_t0 = 0.0
-        self.total_events = 0.0
-        self.total_steps = 0
-        self.wall_s = 0.0
-        self.completed = 0
-        self.deadline_misses = 0
-        # engine-lifetime tick timing (not per-episode): host scheduling
-        # prep vs async chunk dispatch vs blocking stats retirement
-        self._tick_host_prep_s = 0.0
-        self._tick_dispatch_s = 0.0
-        self._tick_fetch_s = 0.0
-        self._ticks = 0
+        self.metrics.reset(prefix="engine.episode.")
+        self.metrics.reset(prefix="engine.tick.")
 
     def _begin_episode(self, now: float) -> None:
         # throughput + deadline counters are per-episode: an episode opens
         # at the first submit on an idle engine and closes when the last
-        # queued request drains (see events_per_sec for the denominator)
-        self.total_events = 0.0
-        self.total_steps = 0
-        self.completed = 0
-        self.deadline_misses = 0
+        # queued request drains (see events_per_sec for the denominator).
+        # wall_s resets here too — it used to survive from the previous
+        # episode, so a mid-episode read mixed a stale denominator with
+        # fresh numerators (tests/test_snn_engine.py pins the fix).
+        self.metrics.reset(prefix="engine.episode.")
         self._episode_t0 = now
         self._episode_open = True
+
+    # episode counters read straight from the registry; properties keep
+    # the pre-obs attribute API (and make stray writes fail loudly)
+    @property
+    def total_events(self) -> float:
+        return self._m_events.value
+
+    @property
+    def total_steps(self) -> int:
+        return int(self._m_steps.value)
+
+    @property
+    def completed(self) -> int:
+        return int(self._m_completed.value)
+
+    @property
+    def deadline_misses(self) -> int:
+        return int(self._m_misses.value)
+
+    @property
+    def wall_s(self) -> float:
+        return self._m_wall.value
 
     # --------------------------------------------------------- admission
     def _resolve_steps(self, req: StreamRequest) -> int:
@@ -453,6 +535,12 @@ class SNNStreamEngine:
         )
         self._seq += 1
         heapq.heappush(self._queue, (key, rid, req, now, dl))
+        self._m_submitted.inc()
+        self._m_qdepth.set(len(self._queue))
+        self.trace.instant(
+            "submit", now, track="queue",
+            args={"rid": rid, "priority": req.priority},
+        )
         return rid
 
     def _admit(
@@ -466,6 +554,7 @@ class SNNStreamEngine:
         T = self._resolve_steps(req)
         if T > self._ring_steps:
             self._grow_ring(T)
+        t_stage = time.perf_counter()
         # every admission upload is *explicit* (device_put), so the whole
         # serving loop — not just steady-state ticks — runs clean under
         # jax.transfer_guard("disallow")
@@ -489,6 +578,19 @@ class SNNStreamEngine:
         self._slot_total[s] = T
         self._slot_submit_t[s] = t_submit
         self._slot_admit_t[s] = time.perf_counter()
+        # lifecycle spans: time queued (submit -> stage start) on the
+        # queue track, then the staging upload on the winning slot's
+        # track; queue_wait_s keeps its pre-obs meaning (submit ->
+        # admission complete, staging included)
+        self.trace.span(
+            "queue", t_submit, t_stage, track="queue",
+            args={"rid": rid, "priority": req.priority},
+        )
+        self.trace.span(
+            "stage", t_stage, self._slot_admit_t[s], track=f"slot{s}",
+            args={"rid": rid, "steps": T},
+        )
+        self._m_qwait.record(self._slot_admit_t[s] - t_submit)
         self._slot_deadline[s] = abs_deadline
         self._slot_rel_deadline[s] = req.deadline_s
         self._slot_counts[s] = 0.0
@@ -550,10 +652,29 @@ class SNNStreamEngine:
             force = 0
             finished.extend(self._retire())
         t3 = time.perf_counter()
-        self._tick_host_prep_s += t1 - t0
-        self._tick_dispatch_s += t2 - t1
-        self._tick_fetch_s += t3 - t2
-        self._ticks += 1
+        # tick-phase instruments: histograms keep exact sum/count (the
+        # tick_breakdown means) plus tail percentiles; spans make queue
+        # stalls and pipeline bubbles visible on the trace timeline
+        self._m_prep.record(t1 - t0)
+        self._m_dispatch.record(t2 - t1)
+        self._m_fetch.record(t3 - t2)
+        self._m_active.set(sum(r is not None for r in self._slot_req))
+        self.trace.span("host_prep", t0, t1, track="tick")
+        if dispatched:
+            self.trace.span(
+                "dispatch", t1, t2, track="tick",
+                args={"steps": int(take.sum())},
+            )
+            for s in range(S):
+                if take[s] > 0:
+                    self.trace.span(
+                        "chunk", t1, t2, track=f"slot{s}",
+                        args={
+                            "rid": self._slot_req[s],
+                            "steps": int(take[s]),
+                        },
+                    )
+        self.trace.span("stats_fetch", t2, t3, track="tick")
         return finished
 
     def _retire(self) -> List[int]:
@@ -571,8 +692,8 @@ class SNNStreamEngine:
             self._slot_memsum[s] += stats["memsum"][s]
             self._slot_events[s] += stats["events"][s]
             self._slot_retired[s] += int(take[s])
-            self.total_events += float(stats["events"][s].sum())
-            self.total_steps += int(take[s])
+            self._m_events.inc(float(stats["events"][s].sum()))
+            self._m_steps.inc(int(take[s]))
             if self._slot_retired[s] >= self._slot_total[s]:
                 finished.append(s)
         return finished
@@ -589,15 +710,29 @@ class SNNStreamEngine:
         finish_t = time.perf_counter()
         dl = self._slot_deadline[s]
         missed = dl is not None and finish_t > dl
-        self.completed += 1
+        self._m_completed.inc()
+        self._m_finished.inc()
         if missed:
-            self.deadline_misses += 1
+            self._m_misses.inc()
+            self._m_missed_total.inc()
+        latency_s = finish_t - self._slot_submit_t[s]
+        self._m_latency.record(latency_s)
+        self._m_energy.record(oc.energy_pj())
+        self.trace.instant(
+            "complete", finish_t, track=f"slot{s}",
+            args={
+                "rid": self._slot_req[s],
+                "latency_ms": latency_s * 1e3,
+                "energy_pj": oc.energy_pj(),
+                "deadline_missed": bool(missed),
+            },
+        )
         res = StreamResult(
             request_id=self._slot_req[s],
             prediction=pred,
             spike_counts=counts.copy(),
             steps=T,
-            latency_s=finish_t - self._slot_submit_t[s],
+            latency_s=latency_s,
             queue_wait_s=self._slot_admit_t[s] - self._slot_submit_t[s],
             events_per_layer=ev,
             spike_rate=float(ev[0] / (T * cfg.layer_sizes[0])),
@@ -630,11 +765,12 @@ class SNNStreamEngine:
             if self._slot_req[s] is None and self._queue:
                 _, rid, req, t_sub, dl = heapq.heappop(self._queue)
                 self._admit(s, rid, req, t_sub, dl)
+        self._m_qdepth.set(len(self._queue))
         if all(r is None for r in self._slot_req) and not self._inflight:
             return []
         results = [self._finalize(s) for s in self._tick()]
         if self.idle() and self._episode_open:
-            self.wall_s = time.perf_counter() - self._episode_t0
+            self._m_wall.set(time.perf_counter() - self._episode_t0)
             self._episode_open = False
         return results
 
@@ -677,16 +813,14 @@ class SNNStreamEngine:
         return self.deadline_misses / max(self.completed, 1)
 
     def reset_tick_stats(self) -> None:
-        """Zero the tick timing accumulators (e.g. after a warmup episode,
+        """Zero the tick-phase instruments (e.g. after a warmup episode,
         so ``tick_breakdown`` reflects steady state, not first-tick
         compilation)."""
-        self._tick_host_prep_s = 0.0
-        self._tick_dispatch_s = 0.0
-        self._tick_fetch_s = 0.0
-        self._ticks = 0
+        self.metrics.reset(prefix="engine.tick.")
 
     def tick_breakdown(self) -> Dict[str, float]:
-        """Engine-lifetime mean per-tick timing, the host-overhead
+        """Engine-lifetime mean per-tick timing (derived from the
+        ``engine.tick.*`` histograms' exact sums), the host-overhead
         evidence the serving benchmarks record next to raw chunk
         throughput.
 
@@ -699,13 +833,14 @@ class SNNStreamEngine:
         "tick minus host work", not as host dispatch overhead to
         attack.  ``stats_fetch_us`` is the blocking stats retirement
         (any remaining device wait + the single D2H fetch)."""
-        n = max(self._ticks, 1)
+        n = max(self._m_prep.count, 1)
         return {
-            "ticks": self._ticks,
+            "ticks": self._m_prep.count,
             "pipeline_depth": self.pipeline_depth,
-            "host_prep_us": self._tick_host_prep_s / n * 1e6,
-            "dispatch_us": self._tick_dispatch_s / n * 1e6,
-            "stats_fetch_us": self._tick_fetch_s / n * 1e6,
+            "host_prep_us": self._m_prep.sum / n * 1e6,
+            "dispatch_us": self._m_dispatch.sum / n * 1e6,
+            "stats_fetch_us": self._m_fetch.sum / n * 1e6,
+            "dispatch_p99_us": self._m_dispatch.percentile(99) * 1e6,
         }
 
     # -------------------------------------------------------- benchmarks

@@ -1,0 +1,280 @@
+"""Observability layer: histogram accuracy vs numpy, metrics registry
+semantics, span lifecycle invariants on a live engine, Chrome trace
+JSON round-trip, and the dispatch-attribution probe."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import snn
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    TraceRecorder,
+    dispatch_attribution,
+    tick_instrumentation_cost_us,
+)
+from repro.obs.metrics import percentile_tolerance
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=20)
+
+
+def _params(seed=0):
+    return snn.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _train(rate, seed, T=None):
+    rng = np.random.default_rng(seed)
+    T = T or CFG.num_steps
+    return (rng.random((T, CFG.layer_sizes[0])) < rate).astype(np.float32)
+
+
+# ------------------------------------------------------------ histograms
+@pytest.mark.parametrize(
+    "dist",
+    ["lognormal", "uniform", "exponential"],
+)
+@pytest.mark.parametrize("q", [50, 90, 99])
+def test_histogram_percentiles_vs_numpy(dist, q):
+    """p50/p90/p99 within one log-bucket ratio of numpy on known
+    distributions spanning several decades."""
+    rng = np.random.default_rng(7)
+    if dist == "lognormal":
+        xs = rng.lognormal(mean=-5.0, sigma=1.5, size=20_000)
+    elif dist == "uniform":
+        xs = rng.uniform(1e-4, 1e-1, size=20_000)
+    else:
+        xs = rng.exponential(scale=3e-3, size=20_000)
+    h = Histogram("t", lo=1e-7, hi=1e3, buckets_per_decade=16)
+    for x in xs:
+        h.record(x)
+    est = h.percentile(q)
+    true = float(np.percentile(xs, q))
+    tol = percentile_tolerance(16) * 1.01  # one bucket ratio + epsilon
+    assert true / tol <= est <= true * tol, (dist, q, est, true)
+
+
+def test_histogram_exact_moments_and_accounting():
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(mean=0.0, sigma=2.0, size=5000)
+    xs[0] = 1e-9  # underflow
+    xs[1] = 1e9  # overflow
+    h = Histogram("t", lo=1e-6, hi=1e6, buckets_per_decade=8)
+    for x in xs:
+        h.record(x)
+    snap = h.snapshot()
+    assert snap["count"] == len(xs)
+    assert snap["sum"] == pytest.approx(xs.sum())
+    assert snap["min"] == pytest.approx(xs.min())
+    assert snap["max"] == pytest.approx(xs.max())
+    # every recorded value is accounted for, exactly
+    bucket_total = sum(c for _, c in snap["buckets"])
+    assert (
+        snap["underflow"] + snap["overflow"] + bucket_total
+        == snap["count"]
+    )
+    assert snap["underflow"] >= 1 and snap["overflow"] >= 1
+    # percentiles are monotone and clamped to observed range
+    p = [h.percentile(q) for q in (1, 25, 50, 75, 90, 99, 100)]
+    assert all(a <= b + 1e-12 for a, b in zip(p, p[1:]))
+    assert snap["min"] <= p[0] and p[-1] <= snap["max"]
+
+
+def test_histogram_empty_and_reset():
+    h = Histogram("t", lo=1e-3, hi=1e3)
+    assert h.percentile(50) == 0.0
+    snap = h.snapshot()
+    assert snap["count"] == 0 and snap["p99"] == 0.0
+    h.record(1.0)
+    assert h.count == 1
+    h.reset()
+    assert h.count == 0 and h.sum == 0.0 and h.percentile(99) == 0.0
+
+
+def test_counter_gauge_and_registry():
+    reg = MetricsRegistry()
+    c = reg.counter("a.b.c")
+    c.inc()
+    c.inc(2.5)
+    assert reg.counter("a.b.c") is c and c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = reg.gauge("a.b.g")
+    g.set(7)
+    assert g.value == 7.0
+    with pytest.raises(TypeError):
+        reg.gauge("a.b.c")  # kind mismatch is loud
+    h = reg.histogram("x.h", lo=1e-3, hi=1e3)
+    h.record(0.5)
+    # prefix reset: only the a.b.* instruments zero
+    reg.reset(prefix="a.b.")
+    assert c.value == 0.0 and g.value == 0.0 and h.count == 1
+    snap = reg.snapshot()
+    assert set(snap) == {"a.b.c", "a.b.g", "x.h"}
+    assert snap["a.b.c"]["type"] == "counter"
+    assert snap["x.h"]["type"] == "histogram"
+    json.dumps(snap)  # snapshot is JSON-able as-is
+
+
+# ------------------------------------------------------------------ trace
+def test_trace_ring_is_bounded_and_ordered():
+    rec = TraceRecorder(capacity=8)
+    for i in range(20):
+        rec.span(f"s{i}", float(i), float(i) + 0.5, track="t")
+    spans = rec.spans()
+    assert len(spans) == 8  # oldest fell off the back
+    assert [s.name for s in spans] == [f"s{i}" for i in range(12, 20)]
+    with pytest.raises(ValueError):
+        rec.span("bad", 2.0, 1.0)  # t1 < t0 rejected
+    rec.enabled = False
+    rec.span("off", 0.0, 1.0)
+    assert len(rec) == 8
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    rec = TraceRecorder()
+    rec.span("work", 1.0, 1.5, track="tick", args={"n": 3})
+    rec.span("chunk", 1.1, 1.4, track="slot0", cat="request")
+    rec.instant("done", 1.6, track="slot0")
+    path = tmp_path / "trace.json"
+    rec.write(path)
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    # metadata names the process and each track-thread
+    names = {
+        e["args"]["name"] for e in evs if e["name"] == "thread_name"
+    }
+    assert names == {"tick", "slot0"}
+    assert any(e["name"] == "process_name" for e in evs)
+    spans = [e for e in evs if e.get("ph") == "X"]
+    inst = [e for e in evs if e.get("ph") == "i"]
+    assert len(spans) == 2 and len(inst) == 1
+    by_name = {e["name"]: e for e in spans}
+    # timestamps shift to a common zero, microsecond units
+    assert by_name["work"]["ts"] == pytest.approx(0.0)
+    assert by_name["work"]["dur"] == pytest.approx(0.5e6)
+    assert by_name["chunk"]["ts"] == pytest.approx(0.1e6)
+    assert by_name["work"]["args"] == {"n": 3}
+    # one pid, distinct tids per track
+    assert by_name["work"]["tid"] != by_name["chunk"]["tid"]
+
+
+# ------------------------------------------- engine lifecycle invariants
+def test_engine_span_lifecycle_invariants():
+    """Every completed request leaves a full span lifecycle in the ring:
+    queue -> stage -> >=1 chunk -> complete, with monotonic timestamps
+    all ordered within the request."""
+    params = _params()
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=6)
+    n_req = 5
+    rids = [
+        eng.submit(StreamRequest(spikes=_train(0.3, s)))
+        for s in range(n_req)
+    ]
+    eng.drain()
+    spans = eng.trace.spans()
+    assert all(
+        s.t1 is None or s.t1 >= s.t0 for s in spans
+    )  # monotonic within every span
+    for rid in rids:
+        mine = [
+            s for s in spans if s.args and s.args.get("rid") == rid
+        ]
+        kinds = [s.name for s in mine]
+        assert "submit" in kinds
+        assert "queue" in kinds
+        assert "stage" in kinds
+        assert "complete" in kinds
+        assert kinds.count("chunk") >= 1
+        by = {s.name: s for s in mine}
+        queue, stage = by["queue"], by["stage"]
+        chunks = [s for s in mine if s.name == "chunk"]
+        complete = by["complete"]
+        # lifecycle ordering: submit == queue start <= queue end ==
+        # stage start <= every chunk <= complete
+        assert queue.t0 <= queue.t1 <= stage.t0 <= stage.t1
+        for c in chunks:
+            assert stage.t1 <= c.t1 <= complete.t0
+        assert queue.t0 == by["submit"].t0
+        # completion args carry the result-facing fields
+        assert complete.args["latency_ms"] > 0
+        assert complete.args["energy_pj"] > 0
+    # tick-phase spans exist on their own track
+    assert any(s.track == "tick" and s.name == "dispatch" for s in spans)
+    assert any(s.track == "tick" and s.name == "host_prep" for s in spans)
+
+
+def test_engine_metrics_snapshot_consistency():
+    params = _params()
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5)
+    eng.run(
+        [StreamRequest(spikes=_train(0.3, s), deadline_s=1e4)
+         for s in range(4)]
+        + [StreamRequest(spikes=_train(0.3, 9), deadline_s=0.0)]
+    )
+    snap = eng.metrics_snapshot()
+    lat = snap["engine.request.latency_s"]
+    assert lat["count"] == 5
+    assert 0 < lat["p50"] <= lat["p90"] <= lat["p99"]
+    assert snap["engine.request.queue_wait_s"]["count"] == 5
+    assert snap["engine.request.energy_pj"]["count"] == 5
+    assert snap["engine.requests.completed"]["value"] == 5
+    assert snap["engine.requests.deadline_missed"]["value"] == 1
+    assert snap["engine.episode.deadline_misses"]["value"] == 1
+    # tick histograms agree with the derived breakdown
+    tb = eng.tick_breakdown()
+    disp = snap["engine.tick.dispatch_s"]
+    assert tb["ticks"] == disp["count"] > 0
+    assert tb["dispatch_us"] == pytest.approx(
+        disp["sum"] / disp["count"] * 1e6
+    )
+    # per-request energy instrument sums to the results' total
+    assert snap["engine.request.energy_pj"]["sum"] > 0
+
+
+def test_wall_s_resets_per_episode():
+    """Regression: wall_s was initialized in __init__ but never reset in
+    _begin_episode, so a mid-episode events_per_sec() read could see the
+    previous episode's denominator.  It now lives in the episode-scoped
+    registry prefix and zeroes when a new episode opens."""
+    eng = SNNStreamEngine(_params(), CFG, num_slots=1, chunk_steps=5)
+    assert eng.wall_s == 0.0
+    eng.run([StreamRequest(spikes=_train(0.4, 0))])
+    first = eng.wall_s
+    assert first > 0
+    # next submit opens a fresh episode: the stale wall time is gone
+    eng.submit(StreamRequest(spikes=_train(0.4, 1)))
+    assert eng.wall_s == 0.0
+    eng.poll()
+    assert eng.wall_s == 0.0  # still open -> still no final wall time
+    eng.drain()
+    assert eng.wall_s > 0 and eng.wall_s is not first
+
+
+# -------------------------------------------------------------- profiler
+def test_dispatch_attribution_probe():
+    f = jax.jit(lambda x: jnp.tanh(x @ x.T).sum())
+    x = jnp.ones((256, 256))
+    att = dispatch_attribution(f, x, warmup=1, iters=3)
+    assert att["host_enqueue_us"] > 0
+    assert att["device_wait_us"] >= 0
+    assert att["total_us"] >= att["host_enqueue_us"]
+    assert att["total_us"] == pytest.approx(
+        att["host_enqueue_us"] + att["device_wait_us"]
+    )
+    assert 0.0 <= att["device_wait_frac"] <= 1.0
+    assert "dominates" in att["verdict"]
+
+
+def test_tick_instrumentation_cost_is_small():
+    """The per-tick obs recording cost must be microseconds — far under
+    the <2% tick budget stream_bench enforces against measured ticks."""
+    us = tick_instrumentation_cost_us(num_slots=4, reps=500)
+    assert 0 < us < 500  # generous CI-machine bound; typical is ~10us

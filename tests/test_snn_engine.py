@@ -257,6 +257,10 @@ def test_events_per_sec_mid_episode():
     assert finished_rate > 0 and eng.wall_s > 0
     # new episode: counters reset at submit, mid-flight read is coherent
     eng.submit(StreamRequest(spikes=_train(0.5, 1)))
+    # regression: wall_s is episode-scoped — a freshly-opened episode
+    # must not carry the previous episode's wall time (it used to be
+    # initialized once in __init__ and never reset)
+    assert eng.wall_s == 0.0
     # two polls = dispatch chunks 1+2 and retire chunk 1's stats (the
     # pipelined tick holds one chunk's stats in flight); episode still
     # open with two chunks of four outstanding
