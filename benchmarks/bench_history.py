@@ -1,0 +1,200 @@
+"""Bench-smoke trend tracking: append headline numbers, check for drift.
+
+Each CI bench-smoke run appends one JSONL line of headline numbers to
+``BENCH_history.jsonl`` (an uploaded artifact, so the series accumulates
+across runs when the previous artifact is restored):
+
+- ``chunk_steps_per_s`` — the engine's device-resident chunk throughput
+  (``stream_bench.json`` ``chunk.steps_per_s``; higher is better),
+- ``vs_bench`` — the serving cross-check ratio against BENCH_snn.json's
+  ``overhauled_jnp`` path (higher is better),
+- ``p99_latency_ms`` — open-loop serving p99 (lower is better),
+- ``obs_overhead_frac`` — measured per-tick instrumentation cost as a
+  fraction of a tick (lower is better),
+- ``bench_steps_per_s`` — BENCH_snn.json's own ``overhauled_jnp``
+  figure, so engine drift and kernel drift separate.
+
+``check`` compares the newest entry against the **rolling median** of
+the preceding window (default 8 runs) per metric, direction-aware, and
+warns on a >15% regression.  It is deliberately **soft-fail** (exit 0)
+until the series is long enough to trust on shared CI runners — pass
+``--hard`` to turn warnings into a nonzero exit.  Fewer than 3 prior
+entries: the check reports "insufficient history" and passes.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_history append \
+      --stream stream_bench.json [--bench BENCH_snn.json] \
+      [--history BENCH_history.jsonl] [--run-id $GITHUB_SHA]
+  PYTHONPATH=src python -m benchmarks.bench_history check \
+      [--history BENCH_history.jsonl] [--threshold 0.15] [--window 8] \
+      [--hard]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+SCHEMA = "bench_history/v1"
+REPO_ROOT = Path(__file__).resolve().parents[1]
+DEFAULT_HISTORY = REPO_ROOT / "BENCH_history.jsonl"
+
+# metric -> direction ("up" = higher is better, regression is a drop;
+# "down" = lower is better, regression is a rise)
+METRICS = {
+    "chunk_steps_per_s": "up",
+    "vs_bench": "up",
+    "p99_latency_ms": "down",
+    "obs_overhead_frac": "down",
+    "bench_steps_per_s": "up",
+}
+
+
+def headline(
+    stream_path: Path, bench_path: Optional[Path] = None
+) -> Dict:
+    """Extract one history entry's headline numbers from the bench
+    JSONs (raises on unreadable/missing stream_bench.json — there is
+    nothing to record without it)."""
+    doc = json.loads(Path(stream_path).read_text())
+    entry = {
+        "schema": SCHEMA,
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "chunk_steps_per_s": doc["chunk"]["steps_per_s"],
+        "vs_bench": doc["chunk"]["vs_bench_overhauled_jnp"],
+        "p99_latency_ms": doc["open_loop"]["p99_latency_ms"],
+        "obs_overhead_frac": doc["obs_overhead"]["overhead_frac"],
+        "slo_status": doc.get("slo", {}).get("status"),
+    }
+    if bench_path and Path(bench_path).exists():
+        ref = json.loads(Path(bench_path).read_text())
+        entry["bench_steps_per_s"] = (
+            ref["paths"]["overhauled_jnp"]["steps_per_s"]
+        )
+    return entry
+
+
+def append(
+    history_path: Path,
+    stream_path: Path,
+    bench_path: Optional[Path] = None,
+    run_id: Optional[str] = None,
+) -> Dict:
+    entry = headline(stream_path, bench_path)
+    if run_id:
+        entry["run_id"] = run_id
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def load(history_path: Path) -> List[Dict]:
+    """Parse the history, skipping malformed lines (a truncated artifact
+    restore must not kill the trend check)."""
+    entries: List[Dict] = []
+    p = Path(history_path)
+    if not p.exists():
+        return entries
+    for line in p.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(obj, dict) and obj.get("schema") == SCHEMA:
+            entries.append(obj)
+    return entries
+
+
+def check(
+    history_path: Path,
+    threshold: float = 0.15,
+    window: int = 8,
+    min_history: int = 3,
+) -> List[str]:
+    """Direction-aware trend check of the newest entry vs the rolling
+    median of up to ``window`` preceding entries; returns warning
+    strings (empty = no regression detected)."""
+    entries = load(history_path)
+    if len(entries) < min_history + 1:
+        print(
+            f"bench-history: {len(entries)} entries — need "
+            f">{min_history} for a trend check, passing"
+        )
+        return []
+    latest, prior = entries[-1], entries[-1 - window:-1]
+    warnings: List[str] = []
+    for metric, direction in METRICS.items():
+        cur = latest.get(metric)
+        hist = sorted(
+            e[metric] for e in prior
+            if isinstance(e.get(metric), (int, float))
+        )
+        if not isinstance(cur, (int, float)) or len(hist) < min_history:
+            continue
+        med = hist[len(hist) // 2]
+        if med == 0:
+            continue
+        change = (cur - med) / abs(med)
+        regressed = (
+            change < -threshold if direction == "up"
+            else change > threshold
+        )
+        if regressed:
+            warnings.append(
+                f"{metric}: {cur:.6g} vs rolling median {med:.6g} "
+                f"({change:+.1%}, {'higher' if direction == 'down' else 'lower'}"
+                f" is worse) exceeds the {threshold:.0%} budget"
+            )
+    return warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_a = sub.add_parser("append", help="record one run's headlines")
+    ap_a.add_argument("--stream", type=Path,
+                      default=REPO_ROOT / "stream_bench.json")
+    ap_a.add_argument("--bench", type=Path,
+                      default=REPO_ROOT / "BENCH_snn.json")
+    ap_a.add_argument("--history", type=Path, default=DEFAULT_HISTORY)
+    ap_a.add_argument("--run-id", default=None)
+    ap_c = sub.add_parser("check", help="warn on >threshold regression")
+    ap_c.add_argument("--history", type=Path, default=DEFAULT_HISTORY)
+    ap_c.add_argument("--threshold", type=float, default=0.15)
+    ap_c.add_argument("--window", type=int, default=8)
+    ap_c.add_argument("--hard", action="store_true",
+                      help="exit nonzero on regression warnings "
+                           "(default: soft-fail, warnings only)")
+    args = ap.parse_args(argv)
+
+    if args.cmd == "append":
+        entry = append(
+            args.history, args.stream, args.bench, run_id=args.run_id
+        )
+        shown = {
+            k: v for k, v in entry.items()
+            if k in METRICS or k == "slo_status"
+        }
+        print(f"bench-history: appended to {args.history}: "
+              + json.dumps(shown, sort_keys=True))
+        return 0
+
+    warnings = check(
+        args.history, threshold=args.threshold, window=args.window
+    )
+    for w in warnings:
+        print(f"bench-history REGRESSION WARNING: {w}", file=sys.stderr)
+    if not warnings:
+        print("bench-history: no regression vs rolling median")
+    return 1 if (warnings and args.hard) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -44,10 +44,26 @@ layer (``repro.obs``):
   Perfetto-loadable per-request + tick-phase spans) and the full
   metrics snapshot (``*_metrics.json``), recorded under ``artifacts``.
 
+Schema v4 adds the engine's *windowed* observability:
+
+- a **timeseries** block from the engine's per-tick/per-submit
+  ``TimeSeriesSampler``: sample accounting, trailing-window rates
+  (events/s, ticks/s, windowed miss-rate) and a consistency table
+  proving the sum of sampled counter deltas equals the lifetime counter
+  values (the series was restarted at the post-warmup reset point, so
+  the two must agree exactly);
+- an **slo** verdict block — ``engine.health()``'s full multi-window
+  burn-rate report over ``default_slos`` with the p99 target set to the
+  run's deadline (the planted already-due requests guarantee a nonzero
+  observed error rate on the deadline SLO);
+- a third sidecar: the time series itself as JSONL
+  (``*_timeseries.jsonl``), one object per sample.
+
 Emits ``stream_bench.json``; ``--validate`` structurally checks it (and
 its sidecars) and fails on a chunk-throughput collapse vs the BENCH
-baseline, missing/inconsistent histograms, or instrumentation overhead
-above 2% of a tick.
+baseline, missing/inconsistent histograms, instrumentation overhead
+above 2% of a tick, a thin/inconsistent time series (< 20 samples, or
+deltas that disagree with lifetime totals), or a malformed SLO verdict.
 
 Usage:  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
         PYTHONPATH=src python -m benchmarks.stream_bench --quick [--json P]
@@ -73,19 +89,34 @@ from repro.core import energy, quant, snn
 from repro.events import capacity as cap_mod
 from repro.events import runtime
 from repro.kernels import ops
-from repro.obs import dispatch_attribution, tick_instrumentation_cost_us
+from repro.obs import (
+    default_slos,
+    dispatch_attribution,
+    tick_instrumentation_cost_us,
+)
 
 RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
-SCHEMA = "stream_bench/v3"
-# per-request histograms carried by the v3 schema
+SCHEMA = "stream_bench/v4"
+# per-request histograms carried since the v3 schema
 HIST_KEYS = (
     "engine.request.latency_s",
     "engine.request.queue_wait_s",
     "engine.request.energy_pj",
 )
+# counters whose summed sampled deltas must equal their lifetime values
+# (series restarted at the post-warmup reset, which zeroes them too)
+CONSISTENCY_KEYS = (
+    "engine.requests.submitted",
+    "engine.requests.completed",
+    "engine.requests.deadline_missed",
+)
+# the time series must actually have resolution: the quick run takes
+# ~12 submits + >= 1 tick sample per poll, so 20 is a loose floor that
+# still catches a sampler that silently stopped firing
+MIN_TS_SAMPLES = 20
 # per-tick observability recording must stay a rounding error next to
 # the measured tick (acceptance: resident throughput regresses < 2%
 # with instrumentation on)
@@ -129,9 +160,11 @@ def open_loop_run(
         params, cfg, jnp.asarray(np.stack(trains, axis=1)),
         percentile=100.0, safety=1.2, align=128,
     )
+    # SLOs at the run's own scale: p99 target = the per-request deadline
     engine = SNNStreamEngine(
         params, cfg, num_slots=slots, chunk_steps=Tc, backend="jnp",
         capacities=plan.capacities,
+        slos=default_slos(p99_target_s=deadline_s),
     )
     reqs = [
         StreamRequest(
@@ -148,6 +181,9 @@ def open_loop_run(
     engine.reset_tick_stats()
     engine.metrics.reset(prefix="engine.request")
     engine.trace.clear()
+    # re-baseline the time series at the same reset point, so summed
+    # sampled deltas must equal the lifetime counter values exactly
+    engine.timeseries.restart()
 
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_req))
     results, i = [], 0
@@ -216,14 +252,45 @@ def open_loop_run(
         "overhead_frac": obs_us / max(mean_tick_us, 1e-9),
     }
 
+    # v4: windowed time-series summary + counter-delta consistency.
+    # The series was restarted at the post-warmup reset (which zeroed
+    # the engine.request* counters too), so for never-reset lifetime
+    # counters sum-of-deltas must equal the lifetime value exactly.
+    ts = engine.timeseries
+    snap = engine.metrics_snapshot()
+    win_s = 1.0
+    timeseries_block = {
+        "samples": len(ts),
+        "span_s": ts.span_s(),
+        "window_s": win_s,
+        "windowed": {
+            "miss_rate": engine.windowed_miss_rate(win_s),
+            "events_per_s": ts.rate("engine.episode.events", win_s),
+            "ticks_per_s": ts.rate("engine.tick.dispatch_s.count", win_s),
+            "requests_per_s": ts.rate("engine.requests.completed", win_s),
+        },
+        "consistency": {
+            k: {
+                "series_total": ts.cum(k),
+                "lifetime": float(snap[k]["value"]),
+            }
+            for k in CONSISTENCY_KEYS
+        },
+    }
+
+    # v4: the SLO verdict — engine.health() runs the multi-window
+    # burn-rate evaluation and publishes the engine.slo.status gauge
+    slo_report = engine.health()
+
     # sidecar artifacts next to the JSON: the Perfetto-loadable span
-    # trace and the full metrics snapshot (CI uploads both)
+    # trace, the full metrics snapshot and the time-series JSONL (CI
+    # uploads all three)
     trace_path = json_path.with_name(json_path.stem + "_trace.json")
     metrics_path = json_path.with_name(json_path.stem + "_metrics.json")
+    ts_path = json_path.with_name(json_path.stem + "_timeseries.jsonl")
     engine.export_trace(trace_path)
     engine.metrics.write_json(metrics_path)
-
-    snap = engine.metrics_snapshot()
+    ts.write_jsonl(ts_path)
     doc = {
         "schema": SCHEMA,
         "mode": "quick" if quick else "full",
@@ -266,9 +333,14 @@ def open_loop_run(
         # that is actually host overhead) vs device-compute wait
         "dispatch_attribution": attribution,
         "obs_overhead": obs_overhead,
+        # v4: windowed rates + delta/lifetime consistency proof
+        "timeseries": timeseries_block,
+        # v4: the full multi-window burn-rate report (engine.health())
+        "slo": slo_report,
         "artifacts": {
             "trace": trace_path.name,
             "metrics": metrics_path.name,
+            "timeseries": ts_path.name,
         },
     }
     json_path.write_text(json.dumps(doc, indent=2) + "\n")
@@ -289,6 +361,13 @@ def open_loop_run(
         f"host_enqueue_us={attribution['host_enqueue_us']:.0f};"
         f"device_wait_frac={attribution['device_wait_frac']:.3f};"
         f"obs_overhead_frac={obs_overhead['overhead_frac']:.5f}",
+    )
+    emit(
+        "stream_bench/slo", float(slo_report["status_code"]),
+        f"status={slo_report['status']};"
+        f"samples={timeseries_block['samples']};"
+        f"windowed_miss_rate="
+        f"{timeseries_block['windowed']['miss_rate']:.3f}",
     )
     return doc
 
@@ -416,7 +495,81 @@ def validate(path: Path) -> List[str]:
             f"{MAX_OBS_OVERHEAD_FRAC} budget "
             f"(per_tick_obs_us={obs.get('per_tick_obs_us')!r})"
         )
-    # v3: sidecar artifacts exist and are structurally sound
+    # v4: the time series must be dense enough and its deltas must
+    # reconcile with the lifetime counters
+    ts = doc.get("timeseries", {})
+    n_samples = ts.get("samples")
+    if not isinstance(n_samples, int) or n_samples < MIN_TS_SAMPLES:
+        errors.append(
+            f"timeseries.samples {n_samples!r} < {MIN_TS_SAMPLES} — "
+            f"sampler not firing per tick/submit"
+        )
+    if not isinstance(ts.get("span_s"), (int, float)) or ts["span_s"] <= 0:
+        errors.append(f"timeseries.span_s invalid: {ts.get('span_s')!r}")
+    wnd = ts.get("windowed", {})
+    for k in ("miss_rate", "events_per_s", "ticks_per_s", "requests_per_s"):
+        v = wnd.get(k)
+        if not isinstance(v, (int, float)) or v < 0:
+            errors.append(f"timeseries.windowed.{k} invalid: {v!r}")
+    cons = ts.get("consistency", {})
+    for k in CONSISTENCY_KEYS:
+        c = cons.get(k)
+        if not isinstance(c, dict):
+            errors.append(f"timeseries.consistency.{k} missing")
+            continue
+        st, lt = c.get("series_total"), c.get("lifetime")
+        if (
+            not isinstance(st, (int, float))
+            or not isinstance(lt, (int, float))
+            or abs(st - lt) > 1e-6 * max(abs(lt), 1.0)
+        ):
+            errors.append(
+                f"timeseries.consistency.{k}: sum of sampled deltas "
+                f"{st!r} != lifetime counter {lt!r}"
+            )
+    # v4: the SLO verdict block is a full burn-rate report
+    slo = doc.get("slo", {})
+    status = slo.get("status")
+    if status not in ("healthy", "degraded", "breach"):
+        errors.append(f"slo.status invalid: {status!r}")
+    codes = {"healthy": 0, "degraded": 1, "breach": 2}
+    if slo.get("status_code") != codes.get(status):
+        errors.append(
+            f"slo.status_code {slo.get('status_code')!r} does not encode "
+            f"status {status!r}"
+        )
+    slo_entries = {
+        s.get("name"): s for s in slo.get("slos", [])
+        if isinstance(s, dict)
+    }
+    for name in ("deadline_misses", "latency_p99"):
+        if name not in slo_entries:
+            errors.append(f"slo report missing the {name!r} SLO")
+    dm = slo_entries.get("deadline_misses")
+    if dm is not None:
+        # the run plants already-due deadlines: the whole-series error
+        # rate on the deadline SLO must be observed as nonzero
+        er = dm.get("observed_error_rate")
+        if not isinstance(er, (int, float)) or not er > 0:
+            errors.append(
+                f"deadline_misses SLO observed_error_rate {er!r} not > 0 "
+                f"despite planted already-due deadlines"
+            )
+    for name, entry in slo_entries.items():
+        rules = entry.get("rules")
+        if not isinstance(rules, list) or not rules:
+            errors.append(f"slo {name!r} has no burn-rate rules")
+            continue
+        for r in rules:
+            for k in ("long_burn_rate", "short_burn_rate"):
+                v = r.get(k, "absent")
+                if v is not None and (
+                    not isinstance(v, (int, float)) or v < 0
+                ):
+                    errors.append(f"slo {name!r} rule {k} invalid: {v!r}")
+            if not isinstance(r.get("fired"), bool):
+                errors.append(f"slo {name!r} rule missing 'fired'")
+    # sidecar artifacts exist and are structurally sound
     arts = doc.get("artifacts", {})
     base = Path(path).resolve().parent
     trace_name = arts.get("trace")
@@ -435,8 +588,63 @@ def validate(path: Path) -> List[str]:
                 errors.append(
                     f"metrics snapshot {metrics_name} missing {missing}"
                 )
+            if "engine.slo.status" not in msnap:
+                errors.append(
+                    f"metrics snapshot {metrics_name} missing the "
+                    f"engine.slo.status gauge"
+                )
         except (OSError, json.JSONDecodeError) as e:
             errors.append(f"metrics snapshot unreadable: {e}")
+    ts_name = arts.get("timeseries")
+    if not isinstance(ts_name, str):
+        errors.append("artifacts.timeseries missing")
+    else:
+        errors.extend(
+            _validate_timeseries_file(base / ts_name, n_samples, cons)
+        )
+    return errors
+
+
+def _validate_timeseries_file(
+    path: Path, n_samples, cons: Dict
+) -> List[str]:
+    """The JSONL sidecar must parse, carry one object per sample, and
+    its per-line deltas must re-sum to the doc's consistency totals
+    (ring never overflowed in a bench run, so the file is complete)."""
+    try:
+        lines = Path(path).read_text().splitlines()
+    except OSError as e:
+        return [f"timeseries sidecar unreadable: {e}"]
+    errors: List[str] = []
+    if isinstance(n_samples, int) and len(lines) != n_samples:
+        errors.append(
+            f"timeseries sidecar has {len(lines)} lines, doc says "
+            f"{n_samples} samples"
+        )
+    sums: Dict[str, float] = {}
+    for i, line in enumerate(lines):
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            return errors + [f"timeseries sidecar line {i + 1}: {e}"]
+        for want in ("t", "dt", "values", "deltas"):
+            if want not in obj:
+                errors.append(
+                    f"timeseries sidecar line {i + 1} missing {want!r}"
+                )
+        for k, v in obj.get("deltas", {}).items():
+            sums[k] = sums.get(k, 0.0) + v
+    for k, c in cons.items():
+        if not isinstance(c, dict):
+            continue
+        st = c.get("series_total")
+        if isinstance(st, (int, float)) and abs(
+            sums.get(k, 0.0) - st
+        ) > 1e-6 * max(abs(st), 1.0):
+            errors.append(
+                f"timeseries sidecar deltas for {k} sum to "
+                f"{sums.get(k, 0.0)!r}, doc consistency says {st!r}"
+            )
     return errors
 
 

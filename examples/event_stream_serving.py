@@ -11,9 +11,15 @@ through the streaming engine's ``submit()/poll()`` scheduler:
 
 More requests than slots, so continuous batching, the persistent per-slot
 membrane state, and deadline/queue-wait accounting are all exercised.
-Prints per-request latency, queue wait, deadline verdict, measured spike
-rate and measured energy — note how much cheaper the sparse DVS inputs
-are than dense-ish rate coding at identical network shape.
+The end-of-run report comes straight from the engine's observability
+layer (``repro.obs``) rather than ad-hoc per-request prints: the
+metrics-registry snapshot (latency / queue-wait / energy histogram
+percentiles, request counters), windowed rates from the time-series
+sampler, and the multi-window burn-rate SLO verdict
+(``engine.health()``).  One ad-hoc line survives — the per-traffic-class
+mean energy — because it is the paper's claim in miniature: the sparse
+DVS inputs are far cheaper than dense-ish rate coding at identical
+network shape.
 
 Run:  PYTHONPATH=src python examples/event_stream_serving.py \
           [--steps 25] [--seed 0] [--requests 12]
@@ -89,29 +95,52 @@ def main():
     results += engine.drain()
     results.sort(key=lambda r: r.request_id)
     kinds = ["rate"] * n_rate + ["dvs"] * n_dvs
-    print("req kind  pred  latency     wait  dl    in-rate   "
-          "events(l0,l1)   energy")
-    for r in results:
-        ev = ", ".join(f"{e:.0f}" for e in r.events_per_layer)
-        dl = "-" if r.deadline_s is None else (
-            "MISS" if r.deadline_missed else "ok"
-        )
-        print(
-            f"{r.request_id:3d} {kinds[r.request_id]:5s} {r.prediction:3d} "
-            f"{r.latency_s*1e3:8.1f}ms {r.queue_wait_s*1e3:7.1f}ms {dl:4s} "
-            f"{r.spike_rate:7.3f}   [{ev:>12s}]  {r.energy_pj/1e3:8.1f} nJ"
-        )
+
+    # ------- end-of-run report, straight from the observability layer
+    snap = engine.metrics_snapshot()
+    print(f"served {len(results)} requests "
+          f"({n_rate} rate-coded, {n_dvs} DVS) on 4 slots")
+    print("metrics snapshot (registry histograms, per request):")
+    for key, unit, scale in (
+        ("engine.request.latency_s", "ms", 1e3),
+        ("engine.request.queue_wait_s", "ms", 1e3),
+        ("engine.request.energy_pj", "nJ", 1e-3),
+    ):
+        h = snap[key]
+        print(f"  {key}: p50={h['p50']*scale:.1f}{unit} "
+              f"p90={h['p90']*scale:.1f}{unit} "
+              f"p99={h['p99']*scale:.1f}{unit} (n={h['count']})")
+    print(f"  deadline misses: "
+          f"{snap['engine.requests.deadline_missed']['value']:.0f}"
+          f"/{snap['engine.requests.completed']['value']:.0f} | "
+          f"throughput {engine.events_per_sec():.0f} events/s over "
+          f"{engine.total_steps} slot-steps")
+    ts = engine.timeseries
+    print(f"time series ({len(ts)} samples over {ts.span_s():.2f}s): "
+          f"windowed miss-rate {engine.windowed_miss_rate(1.0):.1%}, "
+          f"{ts.rate('engine.episode.events', 1.0):.0f} events/s (1s)")
+
+    # the paper's claim in miniature: sparse DVS inputs cost far less
+    # than dense-ish rate coding at identical network shape
     for kind in ("rate", "dvs"):
         sel = [r for r in results if kinds[r.request_id] == kind]
         if not sel:
             continue
         e = np.mean([r.energy_pj for r in sel])
         rt = np.mean([r.spike_rate for r in sel])
-        print(f"{kind:5s}: mean input rate {rt:.3f}, "
+        print(f"  {kind:4s}: mean input rate {rt:.3f}, "
               f"mean measured energy {e/1e3:.1f} nJ/inference")
-    print(f"engine throughput: {engine.events_per_sec():.0f} events/s "
-          f"over {engine.total_steps} slot-steps | deadline misses: "
-          f"{engine.deadline_misses}/{engine.completed}")
+
+    # SLO verdict: multi-window burn-rate evaluation over the series
+    health = engine.health()
+    fired = [
+        f"{s['name']}:{s['status']}"
+        for s in health["slos"] if s["status"] != "healthy"
+    ]
+    print(f"SLO verdict: {health['status'].upper()}"
+          + (f" ({', '.join(fired)})" if fired else "")
+          + f" — {len(health['slos'])} SLOs evaluated over "
+            f"{health['span_s']:.2f}s of samples")
 
 
 if __name__ == "__main__":

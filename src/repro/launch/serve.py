@@ -14,8 +14,12 @@ async admission with open-loop Poisson arrivals, deadlines, priorities):
 
 Observability (with --snn): ``--metrics-json`` dumps the engine's full
 instrument snapshot, ``--trace-out`` writes per-request + per-tick-phase
-spans as Perfetto-loadable Chrome trace JSON, and ``--profile-ticks N``
-wraps N steady-state ticks in a programmatic ``jax.profiler`` capture.
+spans as Perfetto-loadable Chrome trace JSON, ``--timeseries-out`` the
+per-tick time series as JSONL, and ``--profile-ticks N`` wraps N
+steady-state ticks in a programmatic ``jax.profiler`` capture.  Both
+open- and closed-loop modes report the trailing-window miss-rate /
+events/s / ticks/s and the SLO burn-rate verdict
+(healthy/degraded/breach) from ``engine.health()``.
 """
 
 from __future__ import annotations
@@ -82,10 +86,16 @@ def _serve_snn(args) -> None:
         layer_sizes=(input_size, args.hidden, 2), num_steps=args.num_steps
     )
     params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    # SLOs: the latency target follows the requested deadline budget
+    # (default 1 s without one); the deadline-miss error budget is 5%
+    from repro.obs import default_slos
+
+    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     engine = SNNStreamEngine(
         params, cfg, num_slots=args.batch, chunk_steps=args.chunk_steps,
         seed=1, backend=args.snn_backend,
         pipeline_depth=0 if args.no_pipeline else 1,
+        slos=default_slos(p99_target_s=deadline_s or 1.0),
     )
 
     key = jax.random.PRNGKey(2)
@@ -112,7 +122,6 @@ def _serve_snn(args) -> None:
         for x in test_x:
             reqs.append(StreamRequest(image=x.reshape(-1)))
 
-    deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
     if deadline_s is not None:
         reqs = [dataclasses.replace(r, deadline_s=deadline_s) for r in reqs]
 
@@ -188,6 +197,29 @@ def _serve_snn(args) -> None:
         f"  deadline budget {budget}: missed {misses}/{served} "
         f"({misses/max(served, 1):.1%})"
     )
+    # windowed signals + SLO verdict: the evolving view (trailing-window
+    # counter deltas from the per-tick time series), not lifetime means,
+    # plus the multi-window burn-rate judgement over the same series
+    health = engine.health()
+    ts = engine.timeseries
+    win_s = 1.0
+    print(
+        f"  windowed ({win_s:.0f}s): miss-rate "
+        f"{engine.windowed_miss_rate(win_s):.1%} | "
+        f"{ts.rate('engine.episode.events', win_s):.0f} events/s | "
+        f"{ts.rate('engine.tick.dispatch_s.count', win_s):.1f} ticks/s "
+        f"({len(ts)} samples over {ts.span_s():.2f}s)"
+    )
+    fired = [
+        f"{s['name']}:{s['status']}"
+        for s in health["slos"] if s["status"] != "healthy"
+    ]
+    print(
+        f"  health: {health['status'].upper()}"
+        + (f" ({', '.join(fired)})" if fired else "")
+        + f" — {len(health['slos'])} SLOs, burn-rate rules over "
+        f"{health['span_s']:.2f}s of samples"
+    )
     print(
         f"  measured energy/inference: mean {en['mean']/1e3:.1f} nJ, "
         f"p99 {en['p99']/1e3:.1f} nJ (model estimate from counted events)"
@@ -210,6 +242,12 @@ def _serve_snn(args) -> None:
         print(
             f"  chrome trace ({len(engine.trace)} spans) -> "
             f"{args.trace_out} (load in ui.perfetto.dev)"
+        )
+    if args.timeseries_out:
+        engine.timeseries.write_jsonl(args.timeseries_out)
+        print(
+            f"  time series ({len(engine.timeseries)} samples) -> "
+            f"{args.timeseries_out}"
         )
     if profile is not None:
         if profile.error:
@@ -264,6 +302,9 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None,
                     help="write per-request + per-tick-phase spans as "
                          "Chrome trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--timeseries-out", default=None,
+                    help="write the per-tick time series (counter "
+                         "deltas, windowed rates) as JSONL")
     ap.add_argument("--profile-ticks", type=int, default=0,
                     help="capture a jax.profiler trace around N "
                          "steady-state ticks (0 = off)")

@@ -11,6 +11,13 @@ path, synthetic DVS collision workload, energy-aware loss):
       --batch 32 --image-hw 32 --snn-steps 15 --energy-lambda 0.05 \
       [--polarity two_channel|signed|on_only] [--ckpt /tmp/snn_ev]
 
+Observability (any mode, mirroring launch/serve.py): ``--metrics-json``
+dumps the trainer's registry snapshot (step-time/loss/grad-norm
+histograms, per-layer spike + energy counters for --snn-events),
+``--trace-out`` writes the per-window span trace as Perfetto-loadable
+Chrome trace JSON, ``--timeseries-out`` the per-window time series as
+JSONL.
+
 On a real TPU pod this same entry point runs under
 `make_production_mesh()`; on this CPU container it uses the host mesh
 (1 device) with identical code paths — the production mesh is exercised
@@ -95,6 +102,11 @@ def _train_snn_events(args) -> None:
             args.steps,
         )
     print("final:", metrics)
+    trainer.export_obs(
+        metrics_json=args.metrics_json,
+        trace_out=args.trace_out,
+        timeseries_out=args.timeseries_out,
+    )
 
 
 def main(argv=None):
@@ -127,6 +139,16 @@ def main(argv=None):
     ap.add_argument("--polarity", default="two_channel",
                     choices=["two_channel", "signed", "on_only"],
                     help="how DVS ON/OFF events map onto input weights")
+    # observability (any mode; mirrors launch/serve.py)
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the trainer's metrics-registry snapshot "
+                         "(histograms/counters/gauges) to this path")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-window train spans as Chrome "
+                         "trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--timeseries-out", default=None,
+                    help="write the per-window time series (counter "
+                         "deltas, windowed rates) as JSONL")
     args = ap.parse_args(argv)
 
     if args.snn_events:
@@ -164,6 +186,11 @@ def main(argv=None):
             state, batches(cfg, args.batch, args.seq), args.steps
         )
     print("final:", metrics)
+    trainer.export_obs(
+        metrics_json=args.metrics_json,
+        trace_out=args.trace_out,
+        timeseries_out=args.timeseries_out,
+    )
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Observability layer: metrics registry, span tracing, tick profiling.
+"""Observability layer: metrics registry, span tracing, tick profiling,
+windowed time series, and SLO burn-rate evaluation.
 
 - ``obs.metrics`` — dependency-free counters / gauges / log-bucket
   histograms behind a ``MetricsRegistry`` (JSON-able snapshots).
@@ -7,6 +8,12 @@
 - ``obs.profiler`` — programmatic ``jax.profiler`` capture around N
   steady-state engine ticks, plus a blocking probe that splits dispatch
   time into host-enqueue vs device-compute wait.
+- ``obs.timeseries`` — bounded ring of timestamped registry samples
+  with counter-delta windowed rates (events/s, miss-rate over the last
+  window, not lifetime averages) and JSONL sidecar export.
+- ``obs.slo`` — declarative SLO specs (error budgets, p99 latency
+  targets) judged by multi-window burn-rate rules over the time
+  series: ``healthy`` / ``degraded`` / ``breach``.
 """
 
 from repro.obs.metrics import (
@@ -21,6 +28,15 @@ from repro.obs.profiler import (
     profile_ticks,
     tick_instrumentation_cost_us,
 )
+from repro.obs.timeseries import Sample, TimeSeriesSampler
+from repro.obs.slo import (
+    BurnRateRule,
+    ErrorBudgetSLO,
+    LatencySLO,
+    STATUS_CODES,
+    default_slos,
+    evaluate as evaluate_slos,
+)
 
 __all__ = [
     "Counter",
@@ -32,4 +48,12 @@ __all__ = [
     "dispatch_attribution",
     "profile_ticks",
     "tick_instrumentation_cost_us",
+    "Sample",
+    "TimeSeriesSampler",
+    "BurnRateRule",
+    "ErrorBudgetSLO",
+    "LatencySLO",
+    "STATUS_CODES",
+    "default_slos",
+    "evaluate_slos",
 ]

@@ -95,6 +95,12 @@ class Histogram:
     recorded value exactly (``underflow + overflow + sum(bucket counts)
     == count``).  Non-positive values count as underflow — log buckets
     cannot place them, but min/sum/count still track them exactly.
+
+    Non-finite values (a diverged loss going NaN, an inf latency from a
+    broken clock) are counted in a separate ``invalid`` field and kept
+    out of count/sum/min/max/buckets entirely: one NaN must not poison
+    ``sum``/``mean`` forever (``nan + x == nan``) or land silently in
+    bucket 0 via ``bisect_left``'s NaN comparison semantics.
     """
 
     kind = "histogram"
@@ -128,11 +134,18 @@ class Histogram:
         self._overflow = 0
         self.count = 0
         self.sum = 0.0
+        self.invalid = 0
         self.min = math.inf
         self.max = -math.inf
 
     def record(self, v: float) -> None:
         v = float(v)
+        if not math.isfinite(v):
+            # NaN/inf: tallied separately, kept out of every finite
+            # statistic (a single NaN would otherwise poison sum/mean
+            # forever and bisect into bucket 0)
+            self.invalid += 1
+            return
         self.count += 1
         self.sum += v
         if v < self.min:
@@ -152,6 +165,7 @@ class Histogram:
         self._overflow = 0
         self.count = 0
         self.sum = 0.0
+        self.invalid = 0
         self.min = math.inf
         self.max = -math.inf
 
@@ -199,6 +213,7 @@ class Histogram:
             "buckets_per_decade": self.buckets_per_decade,
             "underflow": self._underflow,
             "overflow": self._overflow,
+            "invalid": self.invalid,
             # sparse: only non-empty buckets, as [upper_edge, count]
             "buckets": [
                 [self._edges[i], c]
@@ -276,8 +291,13 @@ class MetricsRegistry:
         }
 
     def write_json(self, path) -> None:
+        """Deterministically ordered dump: instruments sort by name (via
+        ``snapshot``), nested keys sort via ``sort_keys``, and bucket
+        arrays are ascending-edge lists by construction — two runs over
+        identical data produce byte-identical sidecars, so metrics
+        artifacts diff cleanly across CI runs."""
         with open(path, "w") as f:
-            json.dump(self.snapshot(), f, indent=2)
+            json.dump(self.snapshot(), f, indent=2, sort_keys=True)
             f.write("\n")
 
 

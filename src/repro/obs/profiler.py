@@ -18,9 +18,11 @@ Two instruments for ROADMAP item 2's open question — *where do the
   share is the true host cost either way.
 
 ``tick_instrumentation_cost_us(...)`` microbenches the exact
-metrics/trace operations one engine tick performs against *scratch*
-instruments, so ``stream_bench.py`` can assert the observability layer
-costs <2% of a tick without perturbing the live registry.
+metrics/trace operations one engine tick performs — including the
+per-tick time-series sample the windowed-rate/SLO layer adds — against
+*scratch* instruments, so ``stream_bench.py`` can assert the
+observability layer costs <2% of a tick without perturbing the live
+registry.
 """
 
 from __future__ import annotations
@@ -165,20 +167,29 @@ def tick_instrumentation_cost_us(
 ) -> float:
     """Measured cost (µs) of the metrics/trace work one engine tick
     performs, against scratch instruments: 3 tick-phase histogram
-    records + 3 tick-phase spans, one chunk span per slot, and the
-    counter/gauge updates ``_tick``/``_retire`` make.  This is the
-    number ``stream_bench.py`` compares against the measured tick time
-    to bound instrumentation overhead."""
+    records + 3 tick-phase spans, one chunk span per slot, the
+    counter/gauge updates ``_tick``/``_retire`` make, and one
+    time-series sample (with latency-bucket tracking) as taken by the
+    windowed-rate/SLO layer each ``poll()``.  This is the number
+    ``stream_bench.py`` compares against the measured tick time to
+    bound instrumentation overhead."""
+    from repro.obs.timeseries import TimeSeriesSampler
+
     reg = MetricsRegistry()
     rec = TraceRecorder(capacity=1024)
     hs = [
         reg.histogram(f"probe.tick.{k}_s", lo=1e-7, hi=10.0)
         for k in ("host_prep", "dispatch", "stats_fetch")
     ]
+    lat = reg.histogram("probe.request.latency_s", lo=1e-6, hi=1e3)
+    lat.record(0.05)
     ticks = reg.counter("probe.ticks")
     events = reg.counter("probe.events")
     steps = reg.counter("probe.steps")
     depth = reg.gauge("probe.queue_depth")
+    sampler = TimeSeriesSampler(
+        reg, capacity=4096, track_buckets=("probe.request.latency_s",)
+    )
     t_start = time.perf_counter()
     for i in range(reps):
         t0 = time.perf_counter()
@@ -196,4 +207,6 @@ def tick_instrumentation_cost_us(
         events.inc(1234.0)
         steps.inc(20.0)
         depth.set(float(i % 7))
+        lat.record(0.01 * (1 + i % 3))
+        sampler.sample()
     return (time.perf_counter() - t_start) / reps * 1e6

@@ -70,6 +70,15 @@ avoidance — is a latency-critical, always-on workload, so the engine is an
   ``export_trace(path)`` writes a Perfetto-loadable Chrome trace.  The
   recording cost is host-side only (the jitted chunk is untouched) and
   ``benchmarks/stream_bench.py`` pins it under 2% of a tick.
+- **Time series + SLOs.** A ``TimeSeriesSampler`` (``engine.timeseries``)
+  captures a registry delta on every tick and admission, turning the
+  lifetime counters into *windowed* rates — events/s, ticks/s,
+  ``windowed_miss_rate()`` — and ``health()`` judges the engine's SLO
+  specs (deadline-miss error budget, p99 latency target; override via
+  the ``slos=`` init arg) with multi-window burn-rate rules over that
+  series, publishing ``healthy``/``degraded``/``breach`` as the
+  ``engine.slo.status`` gauge.  These windowed signals are what the
+  fleet/admission-plane work (ROADMAP item 1) sheds load against.
 """
 
 from __future__ import annotations
@@ -89,7 +98,8 @@ from repro.core import coding, energy, neuron, snn
 from repro.distributed import partitioning
 from repro.events import aer, runtime
 from repro.events import capacity as cap_mod
-from repro.obs import MetricsRegistry, TraceRecorder
+from repro.obs import MetricsRegistry, TimeSeriesSampler, TraceRecorder
+from repro.obs import slo as slo_mod
 
 Array = jax.Array
 
@@ -150,13 +160,18 @@ class SNNStreamEngine:
         mesh=None,
         pipeline_depth: int = 1,
         trace_capacity: int = 8192,
+        timeseries_capacity: int = 4096,
+        slos: Optional[Sequence] = None,
     ):
         self.params = params
         self.cfg = cfg
         self.S = num_slots
         self.Tc = chunk_steps
         self._rng = jax.random.PRNGKey(seed)
-        self._make_instruments(trace_capacity)
+        self.slos = (
+            tuple(slos) if slos is not None else slo_mod.default_slos()
+        )
+        self._make_instruments(trace_capacity, timeseries_capacity)
         # prepare (fake-quantize) once at init — the original loop re-ran
         # the full weight-set quantization inside every chunk execution
         self._prepared = jax.device_put(runtime.prepare_params(params, cfg))
@@ -359,14 +374,20 @@ class SNNStreamEngine:
         }
 
     # ----------------------------------------------------- observability
-    def _make_instruments(self, trace_capacity: int) -> None:
-        """Create the engine's metrics registry + span recorder.
+    def _make_instruments(
+        self, trace_capacity: int, timeseries_capacity: int
+    ) -> None:
+        """Create the engine's metrics registry, span recorder, and
+        windowed time-series sampler.
 
         Episode-scoped counters live under ``engine.episode.`` and reset
         when an episode opens (first submit on an idle engine); request
         histograms and tick-phase histograms are engine-lifetime (reset
         them explicitly via ``metrics.reset(prefix=...)`` or
-        ``reset_tick_stats``).
+        ``reset_tick_stats``).  The sampler captures a registry delta
+        on every tick and every admission (bounded ring; restart it via
+        ``timeseries.restart()`` after warmup) — the signal ``health()``
+        evaluates the engine's SLOs against.
         """
         self.metrics = MetricsRegistry()
         self.trace = TraceRecorder(capacity=trace_capacity)
@@ -402,6 +423,17 @@ class SNNStreamEngine:
         )
         self._m_qdepth = m.gauge("engine.queue.depth")
         self._m_active = m.gauge("engine.slots.active")
+        # SLO verdict gauge (0 healthy / 1 degraded / 2 breach), written
+        # by health(); readable in any snapshot without re-evaluating
+        self._m_health = m.gauge("engine.slo.status")
+        # windowed time series over the registry: per-tick + per-submit
+        # samples; latency buckets tracked so windowed p99 (and the
+        # latency SLO's fraction-over-target) reconstructs from diffs
+        self.timeseries = TimeSeriesSampler(
+            self.metrics,
+            capacity=timeseries_capacity,
+            track_buckets=("engine.request.latency_s",),
+        )
 
     def metrics_snapshot(self) -> Dict[str, Dict]:
         """JSON-able snapshot of every engine instrument."""
@@ -411,6 +443,26 @@ class SNNStreamEngine:
         """Write the recorded spans as Chrome trace-event JSON
         (Perfetto-loadable)."""
         self.trace.write(path)
+
+    def health(self) -> Dict:
+        """Evaluate the engine's SLOs (multi-window burn rates over the
+        time-series sampler) and publish the verdict as the
+        ``engine.slo.status`` gauge.  Returns the JSON-able report:
+        ``status`` is ``healthy`` / ``degraded`` / ``breach``, ``slos``
+        carries per-SLO windowed error rates and per-rule burn rates."""
+        report = slo_mod.evaluate(self.slos, self.timeseries)
+        self._m_health.set(report["status_code"])
+        return report
+
+    def windowed_miss_rate(self, window_s: Optional[float] = 1.0) -> float:
+        """Deadline-miss fraction of completions over the trailing
+        window (whole series when ``window_s`` is None) — the evolving
+        signal, vs ``deadline_miss_rate()``'s episode-lifetime average."""
+        return self.timeseries.ratio(
+            "engine.requests.deadline_missed",
+            "engine.requests.completed",
+            window_s,
+        )
 
     # ------------------------------------------------------------- state
     def _reset_all(self) -> None:
@@ -541,6 +593,9 @@ class SNNStreamEngine:
             "submit", now, track="queue",
             args={"rid": rid, "priority": req.priority},
         )
+        # admission is a state change worth a time-series point (queue
+        # depth, submitted counter) even between ticks
+        self.timeseries.sample()
         return rid
 
     def _admit(
@@ -772,6 +827,10 @@ class SNNStreamEngine:
         if self.idle() and self._episode_open:
             self._m_wall.set(time.perf_counter() - self._episode_t0)
             self._episode_open = False
+        # one time-series point per tick, after completions land, so the
+        # sample sees this tick's counters (misses included) — windowed
+        # rates then track the run as it evolves
+        self.timeseries.sample()
         return results
 
     def drain(self) -> List[StreamResult]:

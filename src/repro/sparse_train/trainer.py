@@ -135,8 +135,16 @@ class EventTrainer(loop.Trainer):
     """``train/loop.Trainer`` over the event-driven SNN.
 
     Inherits the jitted step (with donation), gradient accumulation,
-    checkpoint/restart and the straggler watchdog unchanged; only the
-    model (and the paper's Adam-5e-4 default optimizer) differ.
+    checkpoint/restart, the straggler watchdog and the ``repro.obs``
+    instruments unchanged; only the model (and the paper's Adam-5e-4
+    default optimizer) differ.  On top of the substrate's step-time /
+    loss / grad-norm instruments it registers the paper-facing energy
+    telemetry: per-layer measured spike-count counters
+    (``train.events.l<i>.total``) and a measured-energy counter
+    (``train.energy_pj.total``), accumulated from each sync window's
+    observed per-inference metrics, plus per-inference event/energy
+    histograms — so a training run's spike-activity trajectory is
+    inspectable the same way a serving episode's is.
     """
 
     def __init__(
@@ -168,6 +176,45 @@ class EventTrainer(loop.Trainer):
             ckpt_every=ckpt_every,
             accum_steps=accum_steps,
         )
+        # paper-facing energy telemetry on top of the substrate's
+        # instruments: per-layer measured event counters + energy
+        m = self.metrics
+        self._m_layer_events = [
+            m.counter(f"train.events.l{i}.total")
+            for i in range(self.snn_cfg.num_layers)
+        ]
+        self._m_energy_total = m.counter("train.energy_pj.total")
+        self._m_energy_hist = m.histogram(
+            "train.energy_pj_per_inference", lo=1.0, hi=1e12
+        )
+        self._m_events_hist = m.histogram(
+            "train.events_per_inference", lo=1.0, hi=1e9
+        )
+
+    def _record_window_metrics(self, metrics, window_steps, dt):
+        """Substrate instruments plus the event-driven workload's
+        spike/energy telemetry.
+
+        The async-dispatch loop only materializes device metrics at
+        sync boundaries, so the counters accumulate each window's
+        *observed* per-inference measurements (one observation per
+        window — a sampled integral, documented as such), while the
+        ``train.metrics.*`` gauges and the histograms track the latest
+        per-inference values exactly."""
+        super()._record_window_metrics(metrics, window_steps, dt)
+        total_events = 0.0
+        for i, c in enumerate(self._m_layer_events):
+            ev = metrics.get(f"events_l{i}")
+            if ev is not None and ev >= 0:
+                c.inc(ev)
+                total_events += ev
+        if total_events > 0:
+            self._m_events_hist.record(total_events)
+        energy = metrics.get("energy_pj")
+        if energy is not None:
+            if energy >= 0:
+                self._m_energy_total.inc(energy)
+            self._m_energy_hist.record(energy)
 
     def evaluate(self, params, batch: Dict[str, Array], *, backend="auto"):
         """Inference-mode accuracy + measured events on the serving path.

@@ -1,10 +1,21 @@
 """Training loop substrate: step builder, grad accumulation, metrics,
-checkpoint/restart, straggler watchdog.
+checkpoint/restart, straggler watchdog, and ``repro.obs`` wiring.
 
 `make_train_step` builds the pure step function used by both the real
 trainer and the multi-pod dry-run (launch/dryrun.py lowers exactly this
 function for every arch x shape) — one source of truth for the compiled
 graph.
+
+Every ``Trainer`` carries the same observability kit as the serving
+engine: a ``MetricsRegistry`` (``trainer.metrics`` — step-time / loss /
+grad-norm histograms, step counters, latest-metrics gauges under
+``train.metrics.*``), a ``TraceRecorder`` (``trainer.trace`` — one span
+per sync window on the ``train`` track, straggler warnings as instant
+events) and a ``TimeSeriesSampler`` (``trainer.timeseries`` — one point
+per log window, so windowed steps/s and loss trajectories export as
+JSONL).  Recording happens only at ``log_every`` sync boundaries — the
+cadence at which the loop already blocks on the device — so the
+instrumentation adds no extra host/device synchronization.
 """
 
 from __future__ import annotations
@@ -18,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.models.model import Model
+from repro.obs import MetricsRegistry, TimeSeriesSampler, TraceRecorder
 from repro.optim.adam import Optimizer, apply_updates
 
 PyTree = Any
@@ -157,6 +169,79 @@ class Trainer:
         )
         self.ckpt_every = ckpt_every
         self.watchdog = StragglerWatchdog()
+        self._make_instruments()
+
+    # ----------------------------------------------------- observability
+    def _make_instruments(self) -> None:
+        """The trainer's ``repro.obs`` instruments, mirroring the serving
+        engine's: a metrics registry (step-time/loss/grad-norm
+        histograms + step counters under ``train.``), a span recorder
+        (one span per sync window on the ``train`` track, straggler
+        warnings as instants), and a time-series sampler capturing one
+        point per log window — the cadence at which the async-dispatch
+        loop actually materializes device values, so observability never
+        adds a device sync of its own."""
+        self.metrics = MetricsRegistry()
+        self.trace = TraceRecorder(capacity=4096)
+        m = self.metrics
+        self._m_steps = m.counter("train.steps")
+        self._m_windows = m.counter("train.windows")
+        self._m_stragglers = m.counter("train.straggler_warnings")
+        self._m_step_time = m.histogram(
+            "train.step_time_s", lo=1e-5, hi=1e4
+        )
+        self._m_loss = m.histogram("train.loss", lo=1e-6, hi=1e6)
+        self._m_grad = m.histogram("train.grad_norm", lo=1e-9, hi=1e9)
+        self.timeseries = TimeSeriesSampler(m, capacity=4096)
+
+    def _record_window_metrics(
+        self, metrics: Dict[str, float], window_steps: int, dt: float
+    ) -> None:
+        """Fold one sync window's observations into the registry.
+
+        ``metrics`` is the last step's metric dict (host floats); ``dt``
+        the window's mean per-step wall time.  Gauges under
+        ``train.metrics.*`` always carry the latest observation — the
+        exported snapshot's gauges therefore match ``run()``'s returned
+        metrics exactly.  A NaN loss (divergence) lands in the
+        histogram's ``invalid`` tally instead of poisoning its sum.
+        Subclasses extend this to add workload-specific instruments
+        (``EventTrainer`` adds per-layer spike/energy counters)."""
+        self._m_steps.inc(window_steps)
+        self._m_windows.inc()
+        self._m_step_time.record(dt)
+        if "loss" in metrics:
+            self._m_loss.record(metrics["loss"])
+        if "grad_norm" in metrics:
+            self._m_grad.record(metrics["grad_norm"])
+        for k, v in metrics.items():
+            self.metrics.gauge(f"train.metrics.{k}").set(v)
+
+    def export_obs(
+        self,
+        metrics_json=None,
+        trace_out=None,
+        timeseries_out=None,
+        log_fn=print,
+    ) -> None:
+        """Write whichever observability sidecars were requested: the
+        registry snapshot (deterministic JSON), the Chrome trace, and
+        the per-window time series (JSONL)."""
+        if metrics_json:
+            self.metrics.write_json(metrics_json)
+            log_fn(f"train metrics snapshot -> {metrics_json}")
+        if trace_out:
+            self.trace.write(trace_out)
+            log_fn(
+                f"train trace ({len(self.trace)} spans) -> {trace_out} "
+                f"(load in ui.perfetto.dev)"
+            )
+        if timeseries_out:
+            self.timeseries.write_jsonl(timeseries_out)
+            log_fn(
+                f"train time series ({len(self.timeseries)} samples) -> "
+                f"{timeseries_out}"
+            )
 
     def init_state(self, key) -> TrainState:
         params, _ = self.model.init(key)
@@ -205,15 +290,36 @@ class Trainer:
             sync = i % log_every == 0 or i == num_steps - 1
             if sync:
                 jax.block_until_ready(metrics["loss"])
-                dt = (time.perf_counter() - t_window) / window_steps
-                t_window = time.perf_counter()
-                window_steps = 0
+                t_now = time.perf_counter()
+                dt = (t_now - t_window) / window_steps
                 warn = self.watchdog.observe(dt)
                 if warn:
                     log_fn(f"[watchdog] {warn}")
+                    self._m_stragglers.inc()
+                    self.trace.instant(
+                        "straggler", t_now, track="train",
+                        args={"step": step_no, "mean_step_s": dt},
+                    )
                 last_metrics = {
                     k: float(v) for k, v in metrics.items()
                 }
+                # one span + registry fold + time-series point per sync
+                # window: the loop's own cadence, no extra device syncs
+                self._record_window_metrics(
+                    last_metrics, window_steps, dt
+                )
+                self.trace.span(
+                    "window", t_window, t_now, track="train",
+                    args={
+                        "step": step_no,
+                        "steps": window_steps,
+                        "ms_per_step": dt * 1e3,
+                        "loss": last_metrics.get("loss"),
+                    },
+                )
+                self.timeseries.sample(t_now)
+                t_window = time.perf_counter()
+                window_steps = 0
                 log_fn(
                     f"step {step_no}: "
                     + " ".join(f"{k}={v:.4f}" for k, v in last_metrics.items())

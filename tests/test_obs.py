@@ -1,8 +1,10 @@
-"""Observability layer: histogram accuracy vs numpy, metrics registry
-semantics, span lifecycle invariants on a live engine, Chrome trace
-JSON round-trip, and the dispatch-attribution probe."""
+"""Observability layer: histogram accuracy vs numpy (example + property
+tests), NaN/inf quarantine, deterministic snapshot export, metrics
+registry semantics, span lifecycle invariants on a live engine, Chrome
+trace JSON round-trip, and the dispatch-attribution probe."""
 
 import json
+import math
 
 import numpy as np
 import pytest
@@ -22,6 +24,7 @@ from repro.obs import (
 )
 from repro.obs.metrics import percentile_tolerance
 from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+from tests._hypothesis_compat import given, settings, st
 
 CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=20)
 
@@ -85,6 +88,119 @@ def test_histogram_exact_moments_and_accounting():
     p = [h.percentile(q) for q in (1, 25, 50, 75, 90, 99, 100)]
     assert all(a <= b + 1e-12 for a, b in zip(p, p[1:]))
     assert snap["min"] <= p[0] and p[-1] <= snap["max"]
+
+
+def test_histogram_nan_inf_quarantined():
+    """Non-finite values land in the separate ``invalid`` tally and
+    never touch count/sum/min/max/buckets — one diverged-loss NaN must
+    not poison the mean forever or bisect into bucket 0."""
+    h = Histogram("t", lo=1e-3, hi=1e3)
+    h.record(1.0)
+    h.record(float("nan"))
+    h.record(float("inf"))
+    h.record(float("-inf"))
+    h.record(2.0)
+    snap = h.snapshot()
+    assert snap["invalid"] == 3
+    assert snap["count"] == 2
+    assert snap["sum"] == pytest.approx(3.0)
+    assert snap["mean"] == pytest.approx(1.5)
+    assert math.isfinite(snap["min"]) and math.isfinite(snap["max"])
+    assert snap["underflow"] == 0  # NaN did not bisect into bucket 0
+    assert sum(c for _, c in snap["buckets"]) == 2
+    assert 1.0 <= h.percentile(50) <= 2.0
+    h.reset()
+    assert h.invalid == 0 and h.snapshot()["invalid"] == 0
+
+
+def test_write_json_is_deterministic(tmp_path):
+    """Two registries holding identical data but built in different
+    insertion orders must serialize byte-identically (CI sidecars diff
+    across runs)."""
+    def build(order):
+        reg = MetricsRegistry()
+        for name in order:
+            if name == "z.h":
+                h = reg.histogram("z.h", lo=1e-3, hi=1e3)
+            elif name == "a.c":
+                reg.counter("a.c")
+            else:
+                reg.gauge("m.g")
+        reg.counter("a.c").inc(3)
+        reg.gauge("m.g").set(7)
+        h = reg.get("z.h")
+        for v in (0.01, 0.5, 12.0, 700.0):
+            h.record(v)
+        return reg
+
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    build(["z.h", "a.c", "m.g"]).write_json(p1)
+    build(["m.g", "a.c", "z.h"]).write_json(p2)
+    b1, b2 = p1.read_bytes(), p2.read_bytes()
+    assert b1 == b2
+    doc = json.loads(b1)
+    # nested keys are sorted too
+    assert list(doc) == sorted(doc)
+    assert list(doc["z.h"]) == sorted(doc["z.h"])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    xs=st.lists(
+        st.floats(min_value=1e-3, max_value=1e3,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=400,
+    ),
+    q=st.integers(min_value=1, max_value=100),
+)
+def test_histogram_percentile_property(xs, q):
+    """Property: for in-range value streams the estimated percentile
+    stays within the documented one-log-bucket relative-error bound of
+    the *exact* (nearest-rank) percentile numpy computes over the same
+    values."""
+    bpd = 16
+    h = Histogram("t", lo=1e-4, hi=1e4, buckets_per_decade=bpd)
+    for x in xs:
+        h.record(x)
+    est = h.percentile(q)
+    # exact nearest-rank percentile (the definition the histogram
+    # documents): the ceil(q/100 * n)-th smallest value
+    xs_sorted = np.sort(np.asarray(xs))
+    target = max(1, int(math.ceil(q / 100.0 * len(xs))))
+    true = float(xs_sorted[target - 1])
+    tol = percentile_tolerance(bpd) * (1 + 1e-9)
+    assert true / tol <= est <= true * tol, (q, est, true)
+
+
+def test_histogram_percentile_reset_mid_stream():
+    """Percentiles after a reset reflect only post-reset values."""
+    h = Histogram("t", lo=1e-3, hi=1e3, buckets_per_decade=16)
+    for _ in range(100):
+        h.record(100.0)
+    h.reset()
+    for _ in range(50):
+        h.record(0.1)
+    tol = percentile_tolerance(16) * (1 + 1e-9)
+    for q in (50, 90, 99):
+        est = h.percentile(q)
+        assert 0.1 / tol <= est <= 0.1 * tol, (q, est)
+
+
+def test_histogram_all_underflow_and_all_overflow():
+    """Degenerate streams: everything below lo -> percentiles collapse
+    to the observed min; everything above hi -> observed max."""
+    h = Histogram("t", lo=1.0, hi=10.0)
+    for v in (1e-4, 1e-3, 1e-2):
+        h.record(v)
+    assert h.snapshot()["underflow"] == 3
+    for q in (1, 50, 99):
+        assert h.percentile(q) == pytest.approx(1e-4)  # exact min
+    h2 = Histogram("t2", lo=1.0, hi=10.0)
+    for v in (100.0, 200.0, 300.0):
+        h2.record(v)
+    assert h2.snapshot()["overflow"] == 3
+    for q in (1, 50, 99):
+        assert h2.percentile(q) == pytest.approx(300.0)  # exact max
 
 
 def test_histogram_empty_and_reset():

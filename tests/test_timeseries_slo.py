@@ -1,0 +1,386 @@
+"""Time-series sampler + SLO burn-rate layer: delta/reset semantics,
+windowed rates and histogram reconstruction, JSONL export, burn-rate
+rule evaluation (fire / abstain / clip), and the live integrations —
+``SNNStreamEngine.health()`` and the trainer's per-window series."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import snn
+from repro.obs import (
+    BurnRateRule,
+    ErrorBudgetSLO,
+    LatencySLO,
+    MetricsRegistry,
+    STATUS_CODES,
+    TimeSeriesSampler,
+    default_slos,
+    evaluate_slos,
+)
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+
+class FakeClock:
+    """Deterministic perf_counter stand-in the tests advance by hand."""
+
+    def __init__(self, t=0.0):
+        self.t = float(t)
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+        return self.t
+
+
+def make_sampler(**kw):
+    reg = MetricsRegistry()
+    clock = FakeClock()
+    s = TimeSeriesSampler(reg, clock=clock, **kw)
+    return reg, clock, s
+
+
+# ---------------------------------------------------------------- sampler
+def test_sampler_deltas_and_cum():
+    reg, clock, s = make_sampler()
+    c = reg.counter("c")
+    g = reg.gauge("g")
+    h = reg.histogram("h", lo=1e-3, hi=1e3)
+    s.sample()  # baseline
+    c.inc(5)
+    g.set(3)
+    h.record(0.5)
+    clock.advance(1.0)
+    smp = s.sample()
+    assert smp.dt == pytest.approx(1.0)
+    assert smp.deltas["c"] == pytest.approx(5.0)
+    assert smp.deltas["h.count"] == pytest.approx(1.0)
+    assert smp.deltas["h.sum"] == pytest.approx(0.5)
+    assert "g" not in smp.deltas  # gauges carry level, not flow
+    assert smp.values["g"] == pytest.approx(3.0)
+    c.inc(2)
+    clock.advance(1.0)
+    s.sample()
+    assert s.cum("c") == pytest.approx(7.0)
+    assert s.window_sum("c") == pytest.approx(7.0)
+
+
+def test_sampler_reset_detection():
+    """A counter that went *down* was reset-to-zero and re-incremented:
+    the delta is the new value, never negative (Prometheus rate()
+    semantics) — episode-scoped engine counters depend on this."""
+    reg, clock, s = make_sampler()
+    c = reg.counter("c")
+    s.sample()
+    c.inc(10)
+    clock.advance(1.0)
+    s.sample()
+    c.reset()
+    c.inc(3)  # 10 -> 3: reset + 3 increments
+    clock.advance(1.0)
+    smp = s.sample()
+    assert smp.deltas["c"] == pytest.approx(3.0)
+    assert s.cum("c") == pytest.approx(13.0)
+    assert all(d >= 0 for d in smp.deltas.values())
+
+
+def test_sampler_restart_rebaselines():
+    """restart() clears the ring and re-baselines at *current* values —
+    warmup activity before the restart never leaks into deltas."""
+    reg, clock, s = make_sampler()
+    c = reg.counter("c")
+    c.inc(100)  # warmup traffic
+    clock.advance(1.0)
+    s.sample()
+    s.restart()
+    assert len(s) == 0 and s.cum("c") == 0.0
+    c.inc(4)
+    clock.advance(1.0)
+    s.sample()
+    assert s.cum("c") == pytest.approx(4.0)  # warmup 100 invisible
+
+
+def test_sampler_ring_bounded_cum_survives():
+    reg, clock, s = make_sampler(capacity=4)
+    c = reg.counter("c")
+    for _ in range(10):
+        c.inc()
+        clock.advance(1.0)
+        s.sample()
+    assert len(s) == 4  # ring bounded
+    assert s.cum("c") == pytest.approx(10.0)  # cum tracked outside it
+
+
+def test_windowed_rates_and_ratio():
+    reg, clock, s = make_sampler()
+    done = reg.counter("done")
+    miss = reg.counter("miss")
+    s.sample()
+    # old traffic: 100 done / 0 missed, 10 s ago
+    done.inc(100)
+    clock.advance(1.0)
+    s.sample()
+    clock.advance(9.0)
+    s.sample()
+    # recent traffic: 10 done, 5 missed in the last second
+    done.inc(10)
+    miss.inc(5)
+    clock.advance(1.0)
+    s.sample()
+    # trailing 1 s window sees only the recent interval (the idle
+    # 9 s interval *ends* outside it)
+    assert s.window_sum("done", 1.0) == pytest.approx(10.0)
+    assert s.rate("done", 1.0) == pytest.approx(10.0)
+    assert s.ratio("miss", "done", 1.0) == pytest.approx(0.5)
+    # whole series: lifetime average is very different
+    assert s.window_sum("done") == pytest.approx(110.0)
+    assert s.ratio("miss", "done") == pytest.approx(5.0 / 110.0)
+    # empty window -> 0.0, not a crash
+    assert s.rate("nope", 1.0) == 0.0
+    assert s.ratio("miss", "nope", 1.0) == 0.0
+
+
+def test_windowed_histogram_reconstruction():
+    reg, clock, s = make_sampler(track_buckets=("h",))
+    h = reg.histogram("h", lo=1e-3, hi=1e3, buckets_per_decade=16)
+    s.sample()
+    for _ in range(50):
+        h.record(0.01)  # old: fast
+    clock.advance(10.0)
+    s.sample()
+    for _ in range(20):
+        h.record(100.0)  # recent: slow
+    clock.advance(1.0)
+    s.sample()
+    win = s.windowed_histogram("h", 1.0)
+    assert win is not None
+    assert win.count == 20  # only the recent values
+    tol = 10 ** (1 / 16) * (1 + 1e-9)
+    assert 100.0 / tol <= win.percentile(99) <= 100.0 * tol
+    whole = s.windowed_histogram("h", None)
+    assert whole.count == 70
+    assert whole.sum == pytest.approx(50 * 0.01 + 20 * 100.0)
+    # untracked name / too-few samples -> None
+    assert s.windowed_histogram("nope", 1.0) is None
+
+
+def test_write_jsonl_round_trip(tmp_path):
+    reg, clock, s = make_sampler()
+    c = reg.counter("c")
+    for i in range(3):
+        c.inc(i + 1)
+        clock.advance(0.5)
+        s.sample()
+    path = tmp_path / "ts.jsonl"
+    s.write_jsonl(path)
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(lines) == 3
+    assert all(
+        set(l) == {"t", "dt", "values", "deltas"} for l in lines
+    )
+    # deltas in the file re-sum to the cumulative total
+    assert sum(
+        l["deltas"].get("c", 0.0) for l in lines
+    ) == pytest.approx(s.cum("c"))
+
+
+# -------------------------------------------------------------------- slo
+def _series_with_error_rate(err_frac, *, seconds=10, per_s=100):
+    """A series with steady flow and a constant windowed error rate."""
+    reg, clock, s = make_sampler()
+    done = reg.counter("done")
+    bad = reg.counter("bad")
+    s.sample()
+    for _ in range(seconds):
+        done.inc(per_s)
+        bad.inc(per_s * err_frac)
+        clock.advance(1.0)
+        s.sample()
+    return s
+
+
+def _slo(objective=0.95, rules=()):
+    return ErrorBudgetSLO(
+        name="misses", error_key="bad", total_key="done",
+        objective=objective, rules=tuple(rules),
+    )
+
+
+def test_burn_rate_rule_fires_on_both_windows():
+    rules = [BurnRateRule(long_window_s=4.0, short_window_s=1.0,
+                          threshold=2.0, severity="breach")]
+    # 5% budget, 50% observed error rate -> burn 10x > 2x on both windows
+    rep = evaluate_slos([_slo(rules=rules)], _series_with_error_rate(0.5))
+    assert rep["status"] == "breach"
+    assert rep["status_code"] == STATUS_CODES["breach"]
+    r = rep["slos"][0]["rules"][0]
+    assert r["fired"] is True
+    assert r["long_burn_rate"] == pytest.approx(10.0)
+    assert r["short_burn_rate"] == pytest.approx(10.0)
+    # error rate within budget -> healthy
+    rep2 = evaluate_slos(
+        [_slo(rules=rules)], _series_with_error_rate(0.01)
+    )
+    assert rep2["status"] == "healthy"
+    assert rep2["slos"][0]["rules"][0]["fired"] is False
+
+
+def test_burn_rate_rule_abstains_without_flow():
+    """No flow in a window -> the rule abstains instead of firing (an
+    idle engine is not breaching its SLO)."""
+    reg, clock, s = make_sampler()
+    reg.counter("done")
+    reg.counter("bad")
+    s.sample()
+    clock.advance(5.0)
+    s.sample()  # two samples, zero traffic
+    rules = [BurnRateRule(long_window_s=4.0, short_window_s=1.0,
+                          threshold=1.0)]
+    rep = evaluate_slos([_slo(rules=rules)], s)
+    r = rep["slos"][0]["rules"][0]
+    assert r["fired"] is False
+    assert r["long_burn_rate"] is None
+    assert rep["status"] == "healthy"
+    assert rep["slos"][0]["observed_error_rate"] is None
+
+
+def test_burn_rate_severities_and_clipping():
+    """The slow-burn rule alone fires -> degraded, not breach; windows
+    longer than the series are flagged clipped but still evaluate."""
+    rules = [
+        BurnRateRule(long_window_s=4.0, short_window_s=1.0,
+                     threshold=9.0, severity="breach"),
+        BurnRateRule(long_window_s=100.0, short_window_s=25.0,
+                     threshold=2.0, severity="degraded"),
+    ]
+    # 5% budget, 20% error -> burn 4x: above 2x, below 9x
+    rep = evaluate_slos([_slo(rules=rules)], _series_with_error_rate(0.2))
+    assert rep["status"] == "degraded"
+    fast, slow = rep["slos"][0]["rules"]
+    assert fast["fired"] is False and slow["fired"] is True
+    assert slow["clipped"] is True  # 100 s window over a 10 s series
+
+
+def test_latency_slo_fraction_over_target():
+    reg, clock, s = make_sampler(track_buckets=("lat",))
+    h = reg.histogram("lat", lo=1e-4, hi=1e3, buckets_per_decade=16)
+    s.sample()
+    for _ in range(90):
+        h.record(0.01)
+    for _ in range(10):
+        h.record(10.0)
+    clock.advance(1.0)
+    s.sample()
+    slo = LatencySLO(
+        name="p99", histogram_key="lat", target_s=1.0, percentile=99.0,
+        rules=(BurnRateRule(long_window_s=2.0, short_window_s=0.5,
+                            threshold=2.0),),
+    )
+    err, flow = slo.error_rate(s, None)
+    assert flow == 100
+    assert err == pytest.approx(0.10, abs=0.01)  # 10% over target
+    # 10% over / 1% budget = 10x burn -> fires
+    rep = evaluate_slos([slo], s)
+    assert rep["status"] == "breach"
+    assert rep["slos"][0]["target_s"] == 1.0
+
+
+def test_rule_validation():
+    with pytest.raises(ValueError):
+        BurnRateRule(long_window_s=1.0, short_window_s=2.0, threshold=1.0)
+    with pytest.raises(ValueError):
+        BurnRateRule(long_window_s=2.0, short_window_s=1.0, threshold=0.0)
+    with pytest.raises(ValueError):
+        BurnRateRule(long_window_s=2.0, short_window_s=1.0,
+                     threshold=1.0, severity="bogus")
+    with pytest.raises(ValueError):
+        _slo(objective=1.5)
+    with pytest.raises(ValueError):
+        LatencySLO(name="x", histogram_key="h", target_s=-1.0)
+
+
+# ------------------------------------------------------ live integrations
+CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=20)
+
+
+def _train(rate, seed):
+    rng = np.random.default_rng(seed)
+    return (
+        rng.random((CFG.num_steps, CFG.layer_sizes[0])) < rate
+    ).astype(np.float32)
+
+
+def test_engine_health_and_series():
+    params = snn.init_params(jax.random.PRNGKey(0), CFG)
+    eng = SNNStreamEngine(params, CFG, num_slots=2, chunk_steps=5)
+    n_req = 5
+    eng.run(
+        [StreamRequest(spikes=_train(0.3, s), deadline_s=1e4)
+         for s in range(n_req - 1)]
+        + [StreamRequest(spikes=_train(0.3, 9), deadline_s=0.0)]
+    )
+    # sampled per submit and per poll: at least one point per request
+    assert len(eng.timeseries) >= n_req
+    assert eng.timeseries.cum("engine.requests.completed") == n_req
+    assert eng.windowed_miss_rate(None) == pytest.approx(1 / n_req)
+    report = eng.health()
+    assert report["status"] in STATUS_CODES
+    assert {s["name"] for s in report["slos"]} == {
+        "deadline_misses", "latency_p99",
+    }
+    dm = next(
+        s for s in report["slos"] if s["name"] == "deadline_misses"
+    )
+    assert dm["observed_error_rate"] == pytest.approx(1 / n_req)
+    # the verdict is published as a gauge
+    assert (
+        eng.metrics.gauge("engine.slo.status").value
+        == report["status_code"]
+    )
+    # custom SLO set is honored
+    eng2 = SNNStreamEngine(
+        params, CFG, num_slots=2, chunk_steps=5,
+        slos=default_slos(deadline_objective=0.5, p99_target_s=100.0),
+    )
+    assert eng2.slos[0].budget == pytest.approx(0.5)
+
+
+def test_trainer_obs_matches_returned_metrics(tmp_path):
+    """The exported registry's ``train.metrics.*`` gauges equal the
+    metrics ``run()`` returns; spike/energy counters and the per-window
+    series accumulate across sync windows."""
+    from repro.sparse_train import trainer as ev_trainer
+
+    tcfg = ev_trainer.EventTrainConfig(
+        image_hw=8, num_steps=3, hidden=8
+    )
+    t = ev_trainer.EventTrainer(tcfg, energy_lambda=0.01, seed=0)
+    state = t.init_state(jax.random.PRNGKey(0))
+    steps = 8
+    state, metrics = t.run(
+        state, ev_trainer.dvs_batches(0, 2, tcfg), steps,
+        log_every=4, log_fn=lambda *_: None,
+    )
+    path = tmp_path / "m.json"
+    t.export_obs(metrics_json=path, log_fn=lambda *_: None)
+    snap = json.loads(path.read_text())
+    for k, v in metrics.items():
+        assert snap[f"train.metrics.{k}"]["value"] == pytest.approx(
+            v, rel=1e-6
+        ), k
+    assert snap["train.steps"]["value"] == steps
+    # sync windows: i = 0, 4, 7 -> 3 windows, one sample each
+    assert snap["train.windows"]["value"] == 3
+    assert len(t.timeseries) == 3
+    assert t.timeseries.cum("train.steps") == steps
+    # event/energy telemetry accumulated from the observed windows
+    assert snap["train.events.l0.total"]["value"] > 0
+    assert snap["train.energy_pj.total"]["value"] > 0
+    assert snap["train.energy_pj_per_inference"]["count"] == 3
+    assert snap["train.step_time_s"]["count"] == 3
+    assert snap["train.loss"]["invalid"] == 0
