@@ -12,7 +12,16 @@ across runs when the previous artifact is restored):
 - ``obs_overhead_frac`` — measured per-tick instrumentation cost as a
   fraction of a tick (lower is better),
 - ``bench_steps_per_s`` — BENCH_snn.json's own ``overhauled_jnp``
-  figure, so engine drift and kernel drift separate.
+  figure, so engine drift and kernel drift separate,
+- ``shed_rate`` — the v5 chaos probe's admission shed rate (lower is
+  better: a rising trend at fixed load means serving got slower and
+  the feasibility shedder is rejecting more),
+- ``chaos_miss_rate`` — deadline miss rate among the chaos probe's
+  served requests (lower is better; with shedding on, hopeless
+  deadlines shed instead of missing, so this should sit near zero).
+
+Both fault-tolerance metrics are absent from pre-v5 artifacts; the
+trend check skips metrics a run did not record.
 
 ``check`` compares the newest entry against the **rolling median** of
 the preceding window (default 8 runs) per metric, direction-aware, and
@@ -51,6 +60,8 @@ METRICS = {
     "p99_latency_ms": "down",
     "obs_overhead_frac": "down",
     "bench_steps_per_s": "up",
+    "shed_rate": "down",
+    "chaos_miss_rate": "down",
 }
 
 
@@ -70,6 +81,15 @@ def headline(
         "obs_overhead_frac": doc["obs_overhead"]["overhead_frac"],
         "slo_status": doc.get("slo", {}).get("status"),
     }
+    # v5 fault-tolerance headlines (absent on pre-v5 artifacts; check()
+    # already skips metrics an entry does not carry)
+    chaos = doc.get("fault_tolerance", {}).get("chaos", {})
+    if isinstance(chaos.get("shed_rate"), (int, float)):
+        entry["shed_rate"] = chaos["shed_rate"]
+    if isinstance(chaos.get("deadline_miss_rate"), (int, float)):
+        entry["chaos_miss_rate"] = chaos["deadline_miss_rate"]
+    if isinstance(chaos.get("quarantined"), int):
+        entry["chaos_quarantined"] = chaos["quarantined"]
     if bench_path and Path(bench_path).exists():
         ref = json.loads(Path(bench_path).read_text())
         entry["bench_steps_per_s"] = (

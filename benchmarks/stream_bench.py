@@ -59,11 +59,28 @@ Schema v4 adds the engine's *windowed* observability:
 - a third sidecar: the time series itself as JSONL
   (``*_timeseries.jsonl``), one object per sample.
 
+Schema v5 adds the **fault_tolerance** block (``repro.faults``):
+
+- the clean run's fault/shed counters, which must all be identically
+  zero (no injector, no admission policy — the detection layer is a
+  bit-exact no-op on healthy traffic);
+- a seeded chaos probe on the same config: load shedding enabled
+  (bounded admission queue + EDF feasibility shedder), two already-due
+  requests (shed at admission instead of served-and-missed), two
+  priority-1 requests (parked through queue overflow, then served),
+  and a seeded ``FaultSchedule`` injected mid-run.  The block reports
+  the shed rate, quarantine count vs the injector's own application
+  log, the worst-case injection->quarantine recovery lag in ticks,
+  retry/demotion counters and the chaos-vs-clean deadline miss rate.
+
 Emits ``stream_bench.json``; ``--validate`` structurally checks it (and
 its sidecars) and fails on a chunk-throughput collapse vs the BENCH
 baseline, missing/inconsistent histograms, instrumentation overhead
 above 2% of a tick, a thin/inconsistent time series (< 20 samples, or
-deltas that disagree with lifetime totals), or a malformed SLO verdict.
+deltas that disagree with lifetime totals), a malformed SLO verdict,
+nonzero clean-run fault counters, a chaos probe whose quarantine count
+disagrees with its injection log (or that crashed, or recovered too
+slowly).
 
 Usage:  PYTHONPATH=src python -m benchmarks.stream_bench [--full]
         PYTHONPATH=src python -m benchmarks.stream_bench --quick [--json P]
@@ -99,7 +116,7 @@ RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
-SCHEMA = "stream_bench/v4"
+SCHEMA = "stream_bench/v5"
 # per-request histograms carried since the v3 schema
 HIST_KEYS = (
     "engine.request.latency_s",
@@ -126,6 +143,161 @@ MAX_OBS_OVERHEAD_FRAC = 0.02
 # sits above 1.0x; the floor catches collapse (a resident path that
 # quietly fell back to host assembly lands well below it)
 MIN_VS_BENCH = 0.6
+# v5 chaos probe geometry: seeded fault schedule + bounded-queue
+# shedding on the same collision config as the open-loop run
+FT_SEED = 7
+FT_FAULTS = 6
+FT_REQUESTS = 12
+FT_QUEUE_DEPTH = 4
+# a quarantine must land within this many ticks of its injection
+# (detection is one chunk behind the mutation, plus the one-deep stats
+# pipeline and the drain loop's eager finishing) — the chaos test
+# suite pins <= 6 at the same geometry, the artifact floor is looser
+MAX_RECOVERY_TICKS = 8
+# fault/shed counters that must be identically zero on the clean run
+FT_CLEAN_ZERO_KEYS = (
+    "engine.requests.shed",
+    "engine.requests.parked",
+    "engine.requests.quarantined",
+    "engine.faults.chunk_retries",
+    "engine.faults.backend_demoted",
+    "engine.faults.injected",
+)
+
+
+def _fault_tolerance_run(cfg, params, capacities) -> Dict:
+    """Seeded chaos probe for the v5 ``fault_tolerance`` block.
+
+    Same collision config as the open-loop run, but with the
+    fault-tolerance plane switched on: a bounded admission queue (depth
+    ``FT_QUEUE_DEPTH``) with EDF feasibility shedding, and a seeded
+    :class:`~repro.faults.FaultSchedule` injected mid-run.  The
+    submission pattern is deterministic by construction: two
+    already-due requests (the feasibility shedder rejects them at
+    admission instead of serving-and-missing), two bursts that overflow
+    the bounded queue (the priority-1 request in each parks, the last
+    priority-0 one sheds), the rest served.  Returns the measured chaos
+    sub-block; ``crashes`` counts loop-level exceptions (must be 0).
+    """
+    import dataclasses as _dc
+
+    from repro.faults import (
+        AdmissionPolicy,
+        FaultInjector,
+        FaultSchedule,
+        RetryPolicy,
+    )
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    slots, Tc = 4, 5
+    n_req = FT_REQUESTS
+    K = cfg.layer_sizes[0]
+    rng = np.random.default_rng(1)
+    trains = [
+        (rng.random((cfg.num_steps, K)) < 0.2).astype(np.float32)
+        for _ in range(n_req)
+    ]
+    eng = SNNStreamEngine(
+        params, cfg, num_slots=slots, chunk_steps=Tc, backend="jnp",
+        capacities=capacities,
+        admission=AdmissionPolicy(max_queue_depth=FT_QUEUE_DEPTH),
+        # budget above the worst-case pile-up of same-tick injected
+        # exceptions: generated schedules stay transient (see
+        # FaultSchedule.generate), so the supervisor always recovers
+        retry=RetryPolicy(max_retries=8, backoff_s=0.0),
+    )
+    # warm without the injector: pays the chunk compile and gives the
+    # feasibility shedder its measured tick-rate evidence
+    eng.run([StreamRequest(spikes=trains[0])])
+    eng.reset_tick_stats()
+    eng.metrics.reset(prefix="engine.request")
+    eng.metrics.reset(prefix="engine.faults")
+    eng.metrics.reset(prefix="engine.episode")
+    # schedule the faults over the post-warm tick horizon
+    t0 = eng._tick_index
+    base = FaultSchedule.generate(
+        FT_SEED, FT_FAULTS, ticks=12, num_slots=slots,
+        num_layers=cfg.num_layers,
+        kinds=("nan_membrane", "corrupt_ring", "chunk_exception"),
+    )
+    schedule = FaultSchedule(
+        faults=tuple(
+            _dc.replace(f, tick=f.tick + t0) for f in base.faults
+        ),
+        seed=FT_SEED,
+    )
+    inj = FaultInjector(schedule)
+    eng.injector = inj
+
+    # generous budget so the feasibility shedder only fires on the two
+    # planted already-due requests (a tight budget is *legitimately*
+    # sheddable when the trailing-window rate evidence straddles it,
+    # which would make the artifact's shed split timing-dependent)
+    deadline_s = 10.0
+
+    def req(i, *, deadline=deadline_s, priority=0):
+        return StreamRequest(
+            spikes=trains[i], deadline_s=deadline, priority=priority
+        )
+
+    bursts = [
+        # burst 1: 2 already-due (feasibility sheds at pop) + 2 normal
+        # fill the queue; the priority-1 request parks, the last sheds
+        [req(0, deadline=0.0), req(1, deadline=0.0), req(2), req(3),
+         req(4, priority=1), req(5)],
+        # burst 2: queue refills; same park/shed tail
+        [req(6), req(7), req(8), req(9), req(10, priority=1), req(11)],
+    ]
+    results, crashes = [], 0
+    try:
+        for burst in bursts:
+            for r in burst:
+                eng.submit(r)
+            results.extend(eng.poll())
+        results.extend(eng.drain(timeout_s=120.0))
+    except Exception:  # chaos must never crash the serving loop
+        crashes = 1
+
+    snap = eng.metrics_snapshot()
+    ok = [r for r in results if r.disposition == "ok"]
+    applied_state = [
+        rec for rec in inj.applied
+        if rec["kind"] in ("nan_membrane", "corrupt_ring")
+    ]
+    applied_tick = {rec["rid"]: rec["tick"] for rec in applied_state}
+    recovery = [
+        ev["tick"] - applied_tick[ev["rid"]]
+        for ev in eng.fault_events if ev["rid"] in applied_tick
+    ]
+    chaos_miss = (
+        sum(r.deadline_missed for r in ok) / len(ok) if ok else 0.0
+    )
+    return {
+        "requests": n_req,
+        "schedule_seed": FT_SEED,
+        "schedule_len": len(schedule),
+        "injected_faults": len(inj.applied),
+        "served_ok": len(ok),
+        "shed": sum(r.disposition == "shed" for r in results),
+        "parked_served": int(sum(r.parked for r in ok)),
+        "quarantined": sum(
+            r.disposition == "quarantined" for r in results
+        ),
+        "quarantine_expected": len(
+            {rec["rid"] for rec in applied_state}
+        ),
+        "shed_rate": float(eng.shed_rate()),
+        "deadline_miss_rate": float(chaos_miss),
+        "recovery_ticks_max": max(recovery) if recovery else None,
+        "chunk_retries": float(
+            snap["engine.faults.chunk_retries"]["value"]
+        ),
+        "backend_demotions": float(
+            snap["engine.faults.backend_demoted"]["value"]
+        ),
+        "crashes": crashes,
+        "diagnosis": eng.health()["diagnosis"]["verdict"],
+    }
 
 
 def open_loop_run(
@@ -282,6 +454,26 @@ def open_loop_run(
     # burn-rate evaluation and publishes the engine.slo.status gauge
     slo_report = engine.health()
 
+    # v5: fault-tolerance evidence.  The clean run above had no
+    # injector and no admission policy, so its fault/shed counters must
+    # all be zero — recorded and validated as such; the chaos probe is
+    # a second, seeded run on the same config with shedding on
+    fault_tolerance = {
+        "clean": {
+            "counters": {
+                k: float(snap[k]["value"]) for k in FT_CLEAN_ZERO_KEYS
+            },
+            "deadline_miss_rate": float(miss_rate),
+        },
+        "chaos": _fault_tolerance_run(cfg, params, plan.capacities),
+    }
+    # shedding-on chaos converts hopeless deadlines into sheds, so the
+    # chaos miss rate sits *below* the clean run's planted-miss rate
+    fault_tolerance["miss_rate_delta"] = (
+        fault_tolerance["chaos"]["deadline_miss_rate"]
+        - fault_tolerance["clean"]["deadline_miss_rate"]
+    )
+
     # sidecar artifacts next to the JSON: the Perfetto-loadable span
     # trace, the full metrics snapshot and the time-series JSONL (CI
     # uploads all three)
@@ -337,6 +529,8 @@ def open_loop_run(
         "timeseries": timeseries_block,
         # v4: the full multi-window burn-rate report (engine.health())
         "slo": slo_report,
+        # v5: clean-run zero counters + the seeded chaos probe
+        "fault_tolerance": fault_tolerance,
         "artifacts": {
             "trace": trace_path.name,
             "metrics": metrics_path.name,
@@ -368,6 +562,15 @@ def open_loop_run(
         f"samples={timeseries_block['samples']};"
         f"windowed_miss_rate="
         f"{timeseries_block['windowed']['miss_rate']:.3f}",
+    )
+    chaos = fault_tolerance["chaos"]
+    emit(
+        "stream_bench/fault_tolerance", float(chaos["shed_rate"]),
+        f"quarantined={chaos['quarantined']};"
+        f"recovery_ticks_max={chaos['recovery_ticks_max']};"
+        f"chaos_miss_rate={chaos['deadline_miss_rate']:.3f};"
+        f"crashes={chaos['crashes']};"
+        f"diagnosis={chaos['diagnosis']}",
     )
     return doc
 
@@ -569,6 +772,81 @@ def validate(path: Path) -> List[str]:
                     errors.append(f"slo {name!r} rule {k} invalid: {v!r}")
             if not isinstance(r.get("fired"), bool):
                 errors.append(f"slo {name!r} rule missing 'fired'")
+    # v5: fault tolerance — clean counters identically zero; the chaos
+    # probe quarantined exactly its injected faults, recovered within
+    # the tick bound, accounted every request, and never crashed
+    ft = doc.get("fault_tolerance", {})
+    counters = ft.get("clean", {}).get("counters", {})
+    for k in FT_CLEAN_ZERO_KEYS:
+        v = counters.get(k)
+        if v != 0:
+            errors.append(
+                f"fault_tolerance.clean.counters[{k!r}] = {v!r} != 0 "
+                f"on a fault-free run"
+            )
+    chaos = ft.get("chaos", {})
+    n = chaos.get("requests")
+    if not isinstance(n, int) or n < 1:
+        errors.append(f"fault_tolerance.chaos.requests invalid: {n!r}")
+    if chaos.get("crashes") != 0:
+        errors.append(
+            f"fault_tolerance.chaos.crashes = "
+            f"{chaos.get('crashes')!r} — the chaos probe crashed"
+        )
+    inj_n = chaos.get("injected_faults")
+    if not isinstance(inj_n, int) or inj_n < 1:
+        errors.append(
+            f"fault_tolerance.chaos.injected_faults {inj_n!r} < 1 — "
+            f"the seeded schedule never fired"
+        )
+    q, qe = chaos.get("quarantined"), chaos.get("quarantine_expected")
+    if not isinstance(qe, int) or qe < 1:
+        errors.append(
+            f"fault_tolerance.chaos.quarantine_expected {qe!r} < 1 — "
+            f"no state/ring fault was ever applied"
+        )
+    if q != qe:
+        errors.append(
+            f"fault_tolerance.chaos quarantined {q!r} != faulted "
+            f"requests {qe!r} — quarantine must hit exactly the "
+            f"faulted slots"
+        )
+    acc = (chaos.get("served_ok"), chaos.get("shed"), q)
+    if not all(isinstance(x, int) for x in acc) or sum(acc) != n:
+        errors.append(
+            f"fault_tolerance.chaos dispositions ok+shed+quarantined "
+            f"{acc!r} do not sum to requests {n!r}"
+        )
+    sr = chaos.get("shed_rate")
+    if not isinstance(sr, (int, float)) or not (0.0 <= sr <= 1.0):
+        errors.append(
+            f"fault_tolerance.chaos.shed_rate invalid: {sr!r}"
+        )
+    elif isinstance(chaos.get("shed"), int) and chaos["shed"] > 0 \
+            and not sr > 0:
+        errors.append(
+            "fault_tolerance.chaos.shed_rate is 0 despite sheds"
+        )
+    mr = chaos.get("deadline_miss_rate")
+    if not isinstance(mr, (int, float)) or not (0.0 <= mr <= 1.0):
+        errors.append(
+            f"fault_tolerance.chaos.deadline_miss_rate invalid: {mr!r}"
+        )
+    rt = chaos.get("recovery_ticks_max")
+    if isinstance(q, int) and q > 0 and (
+        not isinstance(rt, int) or not (1 <= rt <= MAX_RECOVERY_TICKS)
+    ):
+        errors.append(
+            f"fault_tolerance.chaos.recovery_ticks_max {rt!r} outside "
+            f"[1, {MAX_RECOVERY_TICKS}]"
+        )
+    if chaos.get("diagnosis") not in (
+        "faulty", "overloaded", "breaching", "nominal"
+    ):
+        errors.append(
+            f"fault_tolerance.chaos.diagnosis invalid: "
+            f"{chaos.get('diagnosis')!r}"
+        )
     # sidecar artifacts exist and are structurally sound
     arts = doc.get("artifacts", {})
     base = Path(path).resolve().parent

@@ -1,0 +1,45 @@
+"""Fault tolerance for the SNN serving stack.
+
+Three cooperating pieces, consumed by ``serving.snn_engine``:
+
+- :mod:`repro.faults.shedding` — admission-plane load shedding
+  (bounded-queue backpressure + EDF feasibility shedder).
+- :mod:`repro.faults.supervisor` — chunk-dispatch retry with capped
+  backoff and fused->jnp backend demotion.
+- :mod:`repro.faults.inject` — deterministic seeded fault injection
+  (NaN membranes, corrupted rings, dispatch exceptions, tick stalls)
+  for the chaos test suite and ``benchmarks/stream_bench.py``'s
+  ``fault_tolerance`` block.
+"""
+
+from repro.faults.inject import (  # noqa: F401
+    FAULT_KINDS,
+    Fault,
+    FaultInjector,
+    FaultSchedule,
+    InjectedChunkError,
+)
+from repro.faults.shedding import (  # noqa: F401
+    AdmissionPolicy,
+    backpressure,
+    feasibility,
+)
+from repro.faults.supervisor import (  # noqa: F401
+    ChunkDispatchError,
+    ChunkSupervisor,
+    RetryPolicy,
+)
+
+__all__ = [
+    "AdmissionPolicy",
+    "backpressure",
+    "feasibility",
+    "ChunkDispatchError",
+    "ChunkSupervisor",
+    "RetryPolicy",
+    "FAULT_KINDS",
+    "Fault",
+    "FaultInjector",
+    "FaultSchedule",
+    "InjectedChunkError",
+]

@@ -1,0 +1,150 @@
+"""Chunk-dispatch supervision: retry transient failures, demote a
+broken fused backend to the jnp reference path.
+
+The tick loop's chunk dispatch is the engine's single point of total
+failure: an exception out of the jitted chunk call (a Mosaic lowering
+bug, a flaky interpreter, an injected fault) previously unwound
+``poll()`` and killed the episode with S requests resident.  The
+supervisor wraps that call:
+
+- **Transient failures** are retried with capped exponential backoff
+  (``engine.faults.chunk_retries`` counts them).  Retries are safe
+  because a chunk call that *raises* does so while tracing/lowering or
+  enqueueing — before the donated ``states``/``meta`` buffers are
+  consumed — so the attempt closure can simply be invoked again.
+- **Persistent failures on the fused backend** demote the engine to the
+  ``jnp`` reference chunk — permanently, with one loud
+  ``RuntimeWarning`` and an ``engine.faults.backend_demoted`` count —
+  so a kernel bug degrades throughput instead of availability.  The
+  demoted chunk is rebuilt by the caller-supplied ``demote()`` callback
+  (the engine re-jits with ``backend="jnp"``), then the dispatch is
+  attempted once more on the fallback.
+- **Persistent failures on the reference backend** have no fallback:
+  :class:`ChunkDispatchError` propagates with the retry history
+  attached, and ``drain(timeout_s=...)`` surfaces the stall snapshot.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Callable, List, Optional
+
+__all__ = ["RetryPolicy", "ChunkDispatchError", "ChunkSupervisor"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Backoff schedule for transient chunk-dispatch failures."""
+
+    max_retries: int = 2
+    backoff_s: float = 0.005
+    backoff_cap_s: float = 0.1
+    demote_fused: bool = True
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.backoff_s < 0 or self.backoff_cap_s < 0:
+            raise ValueError("backoff must be >= 0")
+
+    def delay_s(self, attempt: int) -> float:
+        """Capped exponential backoff before retry ``attempt`` (1-based)."""
+        return min(self.backoff_s * (2.0 ** (attempt - 1)),
+                   self.backoff_cap_s)
+
+
+class ChunkDispatchError(RuntimeError):
+    """Chunk dispatch failed after exhausting retries and any fallback.
+
+    ``errors`` holds every underlying exception in attempt order.
+    """
+
+    def __init__(self, message: str, errors: List[BaseException]):
+        super().__init__(message)
+        self.errors = list(errors)
+
+
+class ChunkSupervisor:
+    """Runs a chunk-dispatch attempt under the retry/demotion policy.
+
+    ``on_retry``/``on_demote`` are metric hooks (called with the attempt
+    count / once on demotion); ``demote`` swaps the engine's chunk to
+    the jnp path and returns the *fallback* attempt callable, or
+    ``None`` when no fallback exists (already on the reference path).
+    ``sleep`` is injectable for tests.
+    """
+
+    def __init__(
+        self,
+        policy: Optional[RetryPolicy] = None,
+        *,
+        on_retry: Optional[Callable[[int], None]] = None,
+        on_demote: Optional[Callable[[], None]] = None,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        self.policy = policy or RetryPolicy()
+        self._on_retry = on_retry
+        self._on_demote = on_demote
+        self._sleep = sleep
+
+    def call(
+        self,
+        attempt: Callable[[], object],
+        *,
+        backend: str,
+        demote: Optional[Callable[[], Callable[[], object]]] = None,
+    ) -> object:
+        """Invoke ``attempt`` with retries; on exhaustion, demote fused
+        dispatch via ``demote()`` and try the fallback once (plus its
+        own retry budget).  Raises :class:`ChunkDispatchError` when no
+        path succeeds."""
+        errors: List[BaseException] = []
+        for i in range(self.policy.max_retries + 1):
+            try:
+                return attempt()
+            except Exception as exc:  # noqa: BLE001 — supervisor boundary
+                errors.append(exc)
+                if i < self.policy.max_retries:
+                    if self._on_retry is not None:
+                        self._on_retry(1)
+                    self._sleep(self.policy.delay_s(i + 1))
+
+        can_demote = (
+            self.policy.demote_fused
+            and backend == "fused"
+            and demote is not None
+        )
+        if not can_demote:
+            raise ChunkDispatchError(
+                f"chunk dispatch failed after "
+                f"{self.policy.max_retries + 1} attempts on "
+                f"backend={backend!r}: {errors[-1]!r}",
+                errors,
+            )
+
+        warnings.warn(
+            "SNNStreamEngine: fused chunk dispatch failed "
+            f"{len(errors)} times ({errors[-1]!r}); permanently "
+            "demoting backend fused -> jnp for this engine",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        if self._on_demote is not None:
+            self._on_demote()
+        fallback = demote()
+        for i in range(self.policy.max_retries + 1):
+            try:
+                return fallback()
+            except Exception as exc:  # noqa: BLE001
+                errors.append(exc)
+                if i < self.policy.max_retries:
+                    if self._on_retry is not None:
+                        self._on_retry(1)
+                    self._sleep(self.policy.delay_s(i + 1))
+        raise ChunkDispatchError(
+            "chunk dispatch failed on fused and on the jnp fallback "
+            f"({len(errors)} attempts): {errors[-1]!r}",
+            errors,
+        )

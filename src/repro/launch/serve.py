@@ -9,8 +9,22 @@ async admission with open-loop Poisson arrivals, deadlines, priorities):
   PYTHONPATH=src python -m repro.launch.serve --snn --requests 16 \
       --batch 4 --chunk-steps 5 --image-hw 32 [--dvs] \
       [--arrival-rate 20] [--deadline-ms 500] \
+      [--max-queue 8] [--shed] [--drain-timeout 60] \
+      [--inject-faults 4 --fault-seed 0] \
       [--metrics-json metrics.json] [--trace-out trace.json] \
       [--profile-ticks 20 --profile-dir /tmp/snn-profile]
+
+Fault tolerance (with --snn): ``--max-queue N`` bounds the admission
+queue (overflow sheds priority-0 requests, parks higher priorities) and
+``--shed`` turns on the EDF feasibility shedder — both via
+``repro.faults.AdmissionPolicy``.  ``--drain-timeout S`` bounds the
+closed-loop drain and prints the per-slot stuck diagnostic on expiry
+instead of hanging.  ``--inject-faults N`` runs the request load under a
+seeded chaos schedule (NaN membranes, corrupted rings, transient chunk
+exceptions) from ``repro.faults.inject`` — faulted requests come back
+``disposition="quarantined"`` while the other slots keep serving, and
+the summary prints the fault-plane counters plus ``engine.health()``'s
+diagnosis verdict.
 
 Observability (with --snn): ``--metrics-json`` dumps the engine's full
 instrument snapshot, ``--trace-out`` writes per-request + per-tick-phase
@@ -91,11 +105,37 @@ def _serve_snn(args) -> None:
     from repro.obs import default_slos
 
     deadline_s = args.deadline_ms / 1e3 if args.deadline_ms > 0 else None
+
+    # fault-tolerance plane (all opt-in, default off: unbounded queue,
+    # no shedding, no chaos)
+    admission = None
+    if args.max_queue > 0 or args.shed:
+        from repro.faults import AdmissionPolicy
+
+        admission = AdmissionPolicy(
+            max_queue_depth=args.max_queue if args.max_queue > 0 else None,
+            shed_unmeetable=args.shed,
+        )
+    injector = None
+    if args.inject_faults > 0:
+        from repro.faults import FaultInjector, FaultSchedule
+
+        chunks = -(-cfg.num_steps // args.chunk_steps)
+        horizon = max(
+            2 * args.requests * chunks // max(args.batch, 1), 8
+        )
+        injector = FaultInjector(FaultSchedule.generate(
+            args.fault_seed, args.inject_faults, ticks=horizon,
+            num_slots=args.batch, num_layers=cfg.num_layers,
+            kinds=("nan_membrane", "corrupt_ring", "chunk_exception"),
+        ))
+
     engine = SNNStreamEngine(
         params, cfg, num_slots=args.batch, chunk_steps=args.chunk_steps,
         seed=1, backend=args.snn_backend,
         pipeline_depth=0 if args.no_pipeline else 1,
         slos=default_slos(p99_target_s=deadline_s or 1.0),
+        admission=admission, injector=injector,
     )
 
     key = jax.random.PRNGKey(2)
@@ -155,23 +195,46 @@ def _serve_snn(args) -> None:
                 continue
             results.extend(engine.poll())
         results.sort(key=lambda r: r.request_id)
+    elif args.drain_timeout > 0:
+        # bounded closed-loop drain: a wedged tick loop surfaces as the
+        # per-slot stuck diagnostic instead of hanging the launcher
+        from repro.serving.snn_engine import EngineStallError
+
+        for r in reqs:
+            engine.submit(r)
+        try:
+            results = engine.drain(timeout_s=args.drain_timeout)
+        except EngineStallError as e:
+            print(f"snn: STALLED after {args.drain_timeout:.1f}s — "
+                  f"stuck slots: {e.snapshot['slots']}")
+            results = list(e.results)
     else:
         results = engine.run(reqs)
     dt = time.time() - t0
     if profile is not None:
         profile.stop()
-    rate = np.array([r.spike_rate for r in results])
-    events_total = float(sum(r.events_per_layer.sum() for r in results))
+    # latency / energy / throughput aggregate over *served* requests
+    # only — shed requests never ran and quarantined ones carry no
+    # trustworthy outputs (their fault code is the result)
+    ok = [r for r in results if r.disposition == "ok"]
+    n_shed = sum(r.disposition == "shed" for r in results)
+    n_quar = sum(r.disposition == "quarantined" for r in results)
+    rate = np.array([r.spike_rate for r in ok]) if ok else np.zeros(1)
+    events_total = float(sum(r.events_per_layer.sum() for r in ok))
     src = f"dvs-events/{args.polarity}" if args.dvs else "rate-coded"
     loop = (
         f"open-loop {args.arrival_rate:.0f} req/s"
         if args.arrival_rate > 0
         else "closed-loop"
     )
+    disp = (
+        f" (ok {len(ok)} | shed {n_shed} | quarantined {n_quar})"
+        if (n_shed or n_quar) else ""
+    )
     print(
         f"snn[{input_size}->{args.hidden}->2, T={cfg.num_steps}, {src}]: "
         f"served {len(results)} reqs in {dt:.2f}s on {args.batch} slots "
-        f"({loop})"
+        f"({loop}){disp}"
     )
     # report from the metrics snapshot: the engine-lifetime request
     # histograms and counters span every episode an open-loop trace with
@@ -220,6 +283,19 @@ def _serve_snn(args) -> None:
         + f" — {len(health['slos'])} SLOs, burn-rate rules over "
         f"{health['span_s']:.2f}s of samples"
     )
+    diag = health["diagnosis"]
+    print(f"  diagnosis: {diag['verdict'].upper()} — {diag['hint']}")
+    if admission is not None or injector is not None or n_shed or n_quar:
+        print(
+            f"  fault plane: shed {n_shed} "
+            f"({engine.shed_rate():.1%} of submitted) | parked served "
+            f"{int(sum(r.parked for r in ok))} | quarantined {n_quar} | "
+            f"injected "
+            f"{int(snap['engine.faults.injected']['value'])} | retries "
+            f"{int(snap['engine.faults.chunk_retries']['value'])} | "
+            f"demotions "
+            f"{int(snap['engine.faults.backend_demoted']['value'])}"
+        )
     print(
         f"  measured energy/inference: mean {en['mean']/1e3:.1f} nJ, "
         f"p99 {en['p99']/1e3:.1f} nJ (model estimate from counted events)"
@@ -295,6 +371,25 @@ def main(argv=None):
     ap.add_argument("--no-pipeline", action="store_true",
                     help="synchronous ticks (disable the one-deep "
                          "stats-future pipeline; debugging aid)")
+    # fault tolerance (with --snn)
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bound the admission queue at N (overflow "
+                         "sheds priority-0 requests, parks higher "
+                         "priorities; 0 = unbounded)")
+    ap.add_argument("--shed", action="store_true",
+                    help="EDF feasibility shedding: reject requests "
+                         "whose deadline is provably unmeetable at the "
+                         "measured tick rate")
+    ap.add_argument("--drain-timeout", type=float, default=0.0,
+                    help="closed-loop drain timeout in seconds; on "
+                         "expiry print the per-slot stuck diagnostic "
+                         "instead of hanging (0 = wait forever)")
+    ap.add_argument("--inject-faults", type=int, default=0,
+                    help="chaos mode: inject N seeded faults (NaN "
+                         "membranes, corrupted rings, transient chunk "
+                         "exceptions) during the run")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --inject-faults schedules")
     # observability (with --snn)
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine's metrics-registry snapshot "

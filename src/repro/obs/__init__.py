@@ -36,6 +36,7 @@ from repro.obs.slo import (
     STATUS_CODES,
     default_slos,
     evaluate as evaluate_slos,
+    shed_rate_slo,
 )
 
 __all__ = [
@@ -56,4 +57,5 @@ __all__ = [
     "STATUS_CODES",
     "default_slos",
     "evaluate_slos",
+    "shed_rate_slo",
 ]

@@ -55,6 +55,7 @@ __all__ = [
     "STATUS_CODES",
     "default_slos",
     "evaluate",
+    "shed_rate_slo",
     "status_of",
 ]
 
@@ -212,6 +213,45 @@ def default_slos(
             target_s=p99_target_s,
             percentile=99.0,
             rules=rules,
+        ),
+    )
+
+
+def shed_rate_slo(
+    *,
+    objective: float = 0.99,
+    scale_s: float = 1.0,
+) -> ErrorBudgetSLO:
+    """Opt-in fault-tolerance SLO: at least ``objective`` of submitted
+    requests are *not* shed by the admission plane.
+
+    Deliberately not part of :func:`default_slos` — with shedding off
+    (the engine default) the counter never moves and the rule only
+    abstains, and an engine that sheds under overload is *degrading
+    correctly* (``engine.health()['diagnosis']`` reads it as
+    ``overloaded``, not broken).  Operators running a bounded queue
+    append this to the default pair to page on sustained shedding:
+
+    ``slos=default_slos(...) + (shed_rate_slo(objective=0.95),)``
+    """
+    return ErrorBudgetSLO(
+        name="shed_rate",
+        error_key="engine.requests.shed",
+        total_key="engine.requests.submitted",
+        objective=objective,
+        rules=(
+            BurnRateRule(
+                long_window_s=2.0 * scale_s,
+                short_window_s=0.5 * scale_s,
+                threshold=10.0,
+                severity="breach",
+            ),
+            BurnRateRule(
+                long_window_s=8.0 * scale_s,
+                short_window_s=2.0 * scale_s,
+                threshold=2.0,
+                severity="degraded",
+            ),
         ),
     )
 

@@ -79,6 +79,28 @@ avoidance — is a latency-critical, always-on workload, so the engine is an
   series, publishing ``healthy``/``degraded``/``breach`` as the
   ``engine.slo.status`` gauge.  These windowed signals are what the
   fleet/admission-plane work (ROADMAP item 1) sheds load against.
+- **Fault tolerance** (``repro.faults``).  Pass ``admission=`` an
+  ``AdmissionPolicy`` to enable load shedding: a bounded admission
+  queue sheds (or parks, for ``priority > 0``) at ``submit()`` once
+  full, and an EDF feasibility check at admission-pop time sheds
+  requests whose deadline is provably unmeetable from the measured
+  trailing-window tick rate — both surface as ``StreamResult``s with
+  ``disposition="shed"`` instead of guaranteed misses.  With
+  ``fault_checks=True`` (default) the chunk carries in-graph NaN/inf
+  membrane checks, staged-ring count/address range checks, and a
+  staging capacity-overflow check; a poisoned request is *quarantined*
+  (``disposition="quarantined"`` + fault code, slot freed, state
+  sanitized in-graph) while the other S-1 slots keep ticking
+  bit-identically.  Chunk dispatch runs under a retry supervisor
+  (capped exponential backoff) that permanently demotes
+  ``backend="fused"`` to ``"jnp"`` after persistent failures — one
+  ``RuntimeWarning``, counted in ``engine.faults.backend_demoted``.
+  ``drain(timeout_s=...)`` raises ``EngineStallError`` with a
+  per-slot diagnostic snapshot instead of looping forever on a wedged
+  engine, and ``health()`` gains a ``diagnosis`` block separating
+  "overloaded and shedding correctly" from "faulty".  A seeded
+  ``faults.FaultInjector`` (``injector=``) drives the chaos suite in
+  ``tests/test_faults.py`` and the bench's ``fault_tolerance`` block.
 """
 
 from __future__ import annotations
@@ -98,10 +120,42 @@ from repro.core import coding, energy, neuron, snn
 from repro.distributed import partitioning
 from repro.events import aer, runtime
 from repro.events import capacity as cap_mod
+from repro.faults import shedding as shed_mod
+from repro.faults.supervisor import ChunkSupervisor, RetryPolicy
 from repro.obs import MetricsRegistry, TimeSeriesSampler, TraceRecorder
 from repro.obs import slo as slo_mod
 
 Array = jax.Array
+
+# chunk fault bitmask (device-side detection -> host quarantine codes)
+FAULT_NONFINITE_STATE = 1
+FAULT_RING_CORRUPT = 2
+FAULT_CAPACITY_OVERFLOW = 4
+_FAULT_NAMES = {
+    FAULT_NONFINITE_STATE: "nonfinite_state",
+    FAULT_RING_CORRUPT: "ring_corrupt",
+    FAULT_CAPACITY_OVERFLOW: "capacity_overflow",
+}
+
+
+def fault_code_names(code: int) -> str:
+    """Human-readable ``+``-joined names of a chunk fault bitmask."""
+    names = [n for bit, n in sorted(_FAULT_NAMES.items()) if code & bit]
+    return "+".join(names) if names else f"unknown({code})"
+
+
+class EngineStallError(RuntimeError):
+    """``drain(timeout_s=...)`` expired with the engine not idle.
+
+    ``snapshot`` is the per-slot diagnostic state at expiry
+    (``SNNStreamEngine.stall_snapshot()``); ``results`` holds whatever
+    completed before the stall.
+    """
+
+    def __init__(self, message: str, snapshot: Dict, results):
+        super().__init__(message)
+        self.snapshot = snapshot
+        self.results = list(results)
 
 
 @dataclasses.dataclass
@@ -141,6 +195,15 @@ class StreamResult:
     energy_pj: float  # priced from measured events
     deadline_s: Optional[float] = None  # the request's relative budget
     deadline_missed: bool = False
+    # fault-tolerance dispositions: "ok" (served), "shed" (rejected by
+    # the admission plane — never entered a slot), "quarantined"
+    # (poisoned mid-flight; slot reset, stats discarded).  ``fault``
+    # carries the shed reason or quarantine fault-code names; ``parked``
+    # marks a priority request that was parked under overload and later
+    # served best-effort.
+    disposition: str = "ok"
+    fault: Optional[str] = None
+    parked: bool = False
 
 
 class SNNStreamEngine:
@@ -162,6 +225,10 @@ class SNNStreamEngine:
         trace_capacity: int = 8192,
         timeseries_capacity: int = 4096,
         slos: Optional[Sequence] = None,
+        admission: Optional[shed_mod.AdmissionPolicy] = None,
+        fault_checks: bool = True,
+        injector=None,
+        retry: Optional[RetryPolicy] = None,
     ):
         self.params = params
         self.cfg = cfg
@@ -183,12 +250,39 @@ class SNNStreamEngine:
             if capacities is not None
             else None
         )
+        # fault-tolerance plane: admission policy (None = historical
+        # admit-everything behavior), in-graph fault checks, retry/
+        # demotion supervisor, optional deterministic fault injector
+        self.admission = admission
+        self.fault_checks = bool(fault_checks)
+        self.injector = injector
+        self._backend_active = backend
+        self._supervisor = ChunkSupervisor(
+            retry or RetryPolicy(),
+            on_retry=lambda n: self._m_retries.inc(n),
+            on_demote=lambda: self._m_demoted.inc(),
+        )
         # staged event-table geometry: layer-0 capacity bounds every
         # per-step event list; int16 addresses whenever fan-in fits
         self.C = cap_mod.input_capacity(cfg, self.capacities)
         self._addr_dtype = aer.addr_dtype_for(cfg.layer_sizes[0])
         self._ring_steps = max(int(cfg.num_steps), chunk_steps)
-        Tc, C = chunk_steps, self.C
+
+        self._chunk, self._chunk_nodonate = self._build_chunk(backend)
+        self._make_admit_fns()
+        self._reset_all()
+
+    def _build_chunk(self, backend: str):
+        """Build (and jit) the tick chunk for ``backend``; returns the
+        (donating, non-donating) pair.  Called at init and again by the
+        supervisor's demotion path to rebuild the chunk on ``jnp`` after
+        persistent fused failures."""
+        cfg = self.cfg
+        Tc, C = self.Tc, self.C
+        K0 = cfg.layer_sizes[0]
+        fault_checks = self.fault_checks
+        capacities = self.capacities
+        mesh, num_slots = self.mesh, self.S
 
         def _chunk_fn(prepared, states, ring, meta):
             # scheduling metadata lives on device: per-slot consumed-step
@@ -196,6 +290,7 @@ class SNNStreamEngine:
             # derived here, and ``done`` advances in-graph, so a
             # steady-state tick uploads nothing.
             done, total, admit = meta["done"], meta["total"], meta["admit"]
+            fault_in = meta["fault"]
             take = jnp.clip(total - done, 0, Tc)
             act = (take > 0).astype(jnp.float32)
             # in-jit slot turnover: slots admitted since the previous
@@ -241,12 +336,53 @@ class SNNStreamEngine:
                     counts,
                     cfg,
                     active=act,
-                    capacities=self.capacities,
+                    capacities=capacities,
                     prepared=True,
                     backend=backend,
                     layout="slot_major",
                 )
             )
+            # in-graph fault detection: per-slot bitmask riding the same
+            # stats pytree (so quarantine costs zero extra transfers).
+            # Detection is masked to the request's own window — stale
+            # ring contents past ``take`` can't false-positive — and
+            # faulted slots' state is sanitized to zero in-graph
+            # (jnp.where is a bit-exact no-op for clean slots), so a
+            # poisoned slot self-heals while its host-side quarantine
+            # is in flight and never contaminates a later occupant.
+            fault = fault_in
+            if fault_checks:
+                bad_state = jnp.zeros(done.shape, bool)
+                for st in new_states:
+                    bad_state = bad_state | jnp.any(
+                        ~jnp.isfinite(st.u), axis=-1
+                    )
+                bad_count = jnp.any(
+                    (counts < 0) | (counts > C), axis=-1
+                )
+                ev_valid = in_window[:, :, None] & (
+                    jnp.arange(C, dtype=jnp.int32)[None, None, :]
+                    < jnp.clip(counts, 0, C)[:, :, None]
+                )
+                a32 = a_c.astype(jnp.int32)
+                bad_addr = jnp.any(
+                    ev_valid & ((a32 < 0) | (a32 >= K0)), axis=(1, 2)
+                )
+                fault = (
+                    fault
+                    | jnp.where(bad_state, 1, 0).astype(jnp.int32)
+                    | jnp.where(bad_count | bad_addr, 2, 0).astype(
+                        jnp.int32
+                    )
+                )
+                poisoned = (fault > 0)[:, None]
+                new_states = [
+                    neuron.NeuronState(
+                        u=jnp.where(poisoned, 0.0, st.u),
+                        refrac=jnp.where(poisoned, 0, st.refrac),
+                    )
+                    for st in new_states
+                ]
             # per-slot stats accumulate on device; only the request's own
             # steps (take per slot) count toward its result
             m = (
@@ -256,11 +392,15 @@ class SNNStreamEngine:
                 "counts": jnp.sum(out_spikes * m[:, :, None], axis=0),
                 "memsum": jnp.sum(out_mem * m[:, :, None], axis=0),
                 "events": jnp.sum(events * m[:, None, :], axis=0).T,
+                "fault": fault,
             }
             new_meta = {
                 "done": done + take,
                 "total": total,
                 "admit": jnp.zeros_like(admit),
+                # fault codes report exactly once: staged overflow bits
+                # surface in this chunk's stats, then clear
+                "fault": jnp.zeros_like(fault_in),
             }
             return new_states, new_meta, stats
 
@@ -270,10 +410,7 @@ class SNNStreamEngine:
             body = self._shard_over_slots(_chunk_fn, mesh, num_slots)
         # states + metadata are donated: the tick loop threads them
         # through the compiled chunk without ever copying them back out
-        self._chunk = jax.jit(body, donate_argnums=(1, 3))
-        self._chunk_nodonate = jax.jit(body)
-        self._make_admit_fns()
-        self._reset_all()
+        return jax.jit(body, donate_argnums=(1, 3)), jax.jit(body)
 
     @staticmethod
     def _shard_over_slots(chunk_fn, mesh, num_slots: int):
@@ -309,6 +446,7 @@ class SNNStreamEngine:
         """
         C = self.C
         adt = self._addr_dtype
+        fault_checks = self.fault_checks
 
         def stage(ring, meta, train, slot):
             T = train.shape[0]
@@ -324,10 +462,23 @@ class SNNStreamEngine:
                     ring["counts"], table.counts[None], (slot, 0)
                 ),
             }
+            if fault_checks:
+                # capacity overflow: a step with more nonzero inputs
+                # than the layer-0 capacity C would be *silently
+                # truncated* by the packed table — flag the slot so the
+                # first chunk quarantines it instead of serving a
+                # wrong-by-construction result
+                nnz = jnp.sum(train != 0.0, axis=-1)
+                fcode = jnp.where(
+                    jnp.any(nnz > C), FAULT_CAPACITY_OVERFLOW, 0
+                ).astype(jnp.int32)
+            else:
+                fcode = jnp.int32(0)
             meta = {
                 "done": meta["done"].at[slot].set(0),
                 "total": meta["total"].at[slot].set(T),
                 "admit": meta["admit"].at[slot].set(1),
+                "fault": meta["fault"].at[slot].set(fcode),
             }
             return ring, meta
 
@@ -423,6 +574,19 @@ class SNNStreamEngine:
         )
         self._m_qdepth = m.gauge("engine.queue.depth")
         self._m_active = m.gauge("engine.slots.active")
+        # fault-tolerance instruments: admission-plane dispositions
+        # (lifetime), chunk-supervisor events, injector applications,
+        # and the episode-scoped exclusion counters events_per_sec()
+        # subtracts so quarantined work never inflates throughput
+        self._m_shed = m.counter("engine.requests.shed")
+        self._m_parked_total = m.counter("engine.requests.parked")
+        self._m_quarantined = m.counter("engine.requests.quarantined")
+        self._m_retries = m.counter("engine.faults.chunk_retries")
+        self._m_demoted = m.counter("engine.faults.backend_demoted")
+        self._m_injected = m.counter("engine.faults.injected")
+        self._m_q_events = m.counter("engine.episode.quarantined_events")
+        self._m_q_steps = m.counter("engine.episode.quarantined_steps")
+        self._m_parked_depth = m.gauge("engine.queue.parked")
         # SLO verdict gauge (0 healthy / 1 degraded / 2 breach), written
         # by health(); readable in any snapshot without re-evaluating
         self._m_health = m.gauge("engine.slo.status")
@@ -452,7 +616,66 @@ class SNNStreamEngine:
         carries per-SLO windowed error rates and per-rule burn rates."""
         report = slo_mod.evaluate(self.slos, self.timeseries)
         self._m_health.set(report["status_code"])
+        report["diagnosis"] = self._diagnose(report)
         return report
+
+    def _diagnose(self, report: Dict) -> Dict:
+        """Separate *why* the SLO verdict is what it is, so an operator
+        (or the serve launcher) acts on the cause, not the symptom:
+
+        - ``faulty`` — quarantines, backend demotions, or dispatch
+          retries happened: fix the fault before touching capacity.
+        - ``overloaded`` — SLOs unhappy *and* the admission plane is
+          actively shedding: the engine is protecting itself correctly;
+          add capacity or tighten admission.
+        - ``breaching`` — SLOs unhappy with no shedding and no faults:
+          deadlines are simply unserveable at current throughput (or no
+          admission policy is installed to shed the hopeless tail).
+        - ``nominal`` — healthy.
+        """
+        quarantined = self._m_quarantined.value
+        demoted = self._m_demoted.value
+        retries = self._m_retries.value
+        shed = self._m_shed.value
+        window = self.timeseries.ratio(
+            "engine.requests.shed", "engine.requests.submitted", 10.0
+        )
+        unhappy = report["status"] != "healthy"
+        if quarantined > 0 or demoted > 0 or retries > 0:
+            verdict = "faulty"
+            hint = (
+                "fault path active (quarantines/demotions/retries): "
+                "inspect fault_events and engine.faults.* counters "
+                "before scaling anything"
+            )
+        elif unhappy and shed > 0:
+            verdict = "overloaded"
+            hint = (
+                "SLO pressure with active load shedding: the admission "
+                "plane is degrading correctly — add capacity (slots/"
+                "hosts) or lower the offered rate"
+            )
+        elif unhappy:
+            verdict = "breaching"
+            hint = (
+                "SLO pressure with no shedding and no faults: deadlines "
+                "exceed serving capacity — enable an AdmissionPolicy or "
+                "relax deadline targets"
+            )
+        else:
+            verdict = "nominal"
+            hint = "no action needed"
+        return {
+            "verdict": verdict,
+            "hint": hint,
+            "shed_total": shed,
+            "windowed_shed_rate": window,
+            "parked_depth": len(self._parked),
+            "quarantined_total": quarantined,
+            "backend_demotions": demoted,
+            "chunk_retries": retries,
+            "backend": self._backend_active,
+        }
 
     def windowed_miss_rate(self, window_s: Optional[float] = 1.0) -> float:
         """Deadline-miss fraction of completions over the trailing
@@ -473,8 +696,10 @@ class SNNStreamEngine:
             "done": jnp.zeros((S,), jnp.int32),
             "total": jnp.zeros((S,), jnp.int32),
             "admit": jnp.zeros((S,), jnp.int32),
+            "fault": jnp.zeros((S,), jnp.int32),
         }
         self._slot_req = [None] * S  # request id per slot
+        self._slot_parked = [False] * S  # admitted from the parked list
         self._slot_done = np.zeros(S, np.int64)  # steps dispatched
         self._slot_retired = np.zeros(S, np.int64)  # steps stats-retired
         self._slot_total = np.zeros(S, np.int64)
@@ -489,6 +714,15 @@ class SNNStreamEngine:
         # per-slot take snapshot, per-slot request-id snapshot)
         self._inflight: "collections.deque[Tuple]" = collections.deque()
         self._queue: List[tuple] = []  # heap: (key, rid, req, t_sub, dl)
+        # fault-tolerance plane: parked priority requests (FIFO, served
+        # best-effort when the heap empties), shed/quarantined results
+        # awaiting delivery by poll(), the quarantine log (joined by the
+        # bench's recovery-ticks metric), and the tick index the log and
+        # injector schedules are expressed in
+        self._parked: "collections.deque[tuple]" = collections.deque()
+        self._pending_results: List[StreamResult] = []
+        self.fault_events: List[Dict] = []
+        self._tick_index = 0
         self._seq = 0
         self._next_rid = 0
         self._episode_open = False
@@ -560,6 +794,11 @@ class SNNStreamEngine:
             # staged device-side as int8 event values: trains must be
             # integer-valued spike magnitudes (all our encoders are)
             s = np.asarray(req.spikes)
+            if not np.all(np.isfinite(s)):
+                raise ValueError(
+                    "request spikes contain NaN/inf — non-finite trains "
+                    "are rejected at the admission boundary"
+                )
             if not np.all((s == np.round(s)) & (np.abs(s) <= 127)):
                 raise ValueError(
                     "request spikes must be integer-valued magnitudes in "
@@ -571,6 +810,17 @@ class SNNStreamEngine:
             shape = tuple(np.shape(req.image))
             if shape != (K,):
                 raise ValueError(f"request image shape {shape} != ({K},)")
+            # contents matter, not just shape: a NaN pixel makes
+            # rate_encode (uniform < NaN is always False) emit an
+            # all-zero train — a silently wrong answer, not a crash —
+            # so non-finite images are rejected here at the boundary
+            # (tests/test_faults.py pins the silent-garbage failure)
+            img = np.asarray(req.image)
+            if not np.all(np.isfinite(img)):
+                raise ValueError(
+                    "request image contains NaN/inf — non-finite images "
+                    "are rejected at the admission boundary"
+                )
         else:
             raise ValueError("StreamRequest needs image or spikes")
         now = time.perf_counter()
@@ -579,6 +829,22 @@ class SNNStreamEngine:
         rid = self._next_rid
         self._next_rid += 1
         dl = now + req.deadline_s if req.deadline_s is not None else None
+        self._m_submitted.inc()
+        if self.admission is not None:
+            verdict, reason = shed_mod.backpressure(
+                self.admission,
+                queue_depth=len(self._queue),
+                parked_depth=len(self._parked),
+                priority=req.priority,
+            )
+            if verdict == shed_mod.SHED:
+                self._shed(rid, req, now, dl, reason)
+                self.timeseries.sample()
+                return rid
+            if verdict == shed_mod.PARK:
+                self._park(rid, req, now, dl, reason)
+                self.timeseries.sample()
+                return rid
         key = (
             -int(req.priority),
             0 if dl is not None else 1,  # deadline-less requests last
@@ -587,7 +853,6 @@ class SNNStreamEngine:
         )
         self._seq += 1
         heapq.heappush(self._queue, (key, rid, req, now, dl))
-        self._m_submitted.inc()
         self._m_qdepth.set(len(self._queue))
         self.trace.instant(
             "submit", now, track="queue",
@@ -652,6 +917,101 @@ class SNNStreamEngine:
         self._slot_memsum[s] = 0.0
         self._slot_events[s] = 0.0
 
+    # --------------------------------------------------- admission plane
+    def _void_result(
+        self,
+        rid: int,
+        req: StreamRequest,
+        t_submit: float,
+        *,
+        disposition: str,
+        fault: Optional[str],
+    ) -> StreamResult:
+        """A result that carries a disposition instead of an inference:
+        no prediction, no stats, no deadline verdict (the request was
+        never served, so it neither met nor missed anything)."""
+        cfg = self.cfg
+        now = time.perf_counter()
+        return StreamResult(
+            request_id=rid,
+            prediction=-1,
+            spike_counts=np.zeros(cfg.layer_sizes[-1]),
+            steps=self._resolve_steps(req),
+            latency_s=now - t_submit,
+            queue_wait_s=now - t_submit,
+            events_per_layer=np.zeros(cfg.num_layers),
+            spike_rate=0.0,
+            energy_pj=0.0,
+            deadline_s=req.deadline_s,
+            deadline_missed=False,
+            disposition=disposition,
+            fault=fault,
+        )
+
+    def _shed(
+        self,
+        rid: int,
+        req: StreamRequest,
+        t_submit: float,
+        abs_deadline: Optional[float],
+        reason: str,
+    ) -> None:
+        self._m_shed.inc()
+        self.trace.instant(
+            "shed", time.perf_counter(), track="queue",
+            args={"rid": rid, "reason": reason},
+        )
+        self._pending_results.append(self._void_result(
+            rid, req, t_submit, disposition="shed", fault=reason
+        ))
+
+    def _park(
+        self,
+        rid: int,
+        req: StreamRequest,
+        t_submit: float,
+        abs_deadline: Optional[float],
+        reason: str,
+    ) -> None:
+        self._m_parked_total.inc()
+        self._parked.append((rid, req, t_submit, abs_deadline))
+        self._m_parked_depth.set(len(self._parked))
+        self.trace.instant(
+            "park", time.perf_counter(), track="queue",
+            args={"rid": rid, "reason": reason},
+        )
+
+    def measured_ticks_per_s(
+        self, window_s: Optional[float] = None
+    ) -> float:
+        """Tick throughput off the time-series sampler (trailing
+        ``window_s``, falling back to the whole series when the window
+        saw no flow) — the evidence the feasibility shedder converts
+        into a completion-time lower bound.  0.0 on a cold engine."""
+        key = "engine.tick.dispatch_s.count"
+        r = self.timeseries.rate(key, window_s)
+        if r <= 0.0:
+            r = self.timeseries.rate(key, None)
+        return r
+
+    def _admission_verdict(
+        self, req: StreamRequest, abs_deadline: Optional[float]
+    ) -> Tuple[str, Optional[str]]:
+        """Feasibility check when a queued request wins a free slot."""
+        if self.admission is None or not self.admission.shed_unmeetable:
+            return shed_mod.ADMIT, None
+        return shed_mod.feasibility(
+            self.admission,
+            steps=self._resolve_steps(req),
+            chunk_steps=self.Tc,
+            deadline_abs=abs_deadline,
+            now=time.perf_counter(),
+            ticks_per_s=self.measured_ticks_per_s(
+                self.admission.rate_window_s
+            ),
+            priority=req.priority,
+        )
+
     # -------------------------------------------------------------- tick
     def _tick(self) -> List[int]:
         """One pipelined engine step: dispatch the next chunk (if any slot
@@ -667,6 +1027,16 @@ class SNNStreamEngine:
         deadline verdict).
         """
         S, Tc = self.S, self.Tc
+        tick = self._tick_index
+        self._tick_index += 1
+        if self.injector is not None:
+            applied = self.injector.begin_tick(self, tick)
+            if applied:
+                self._m_injected.inc(len(applied))
+            if self.injector.stalled(tick):
+                # injected stall: the tick makes no progress at all —
+                # exactly the wedge drain(timeout_s=...) must survive
+                return []
         t0 = time.perf_counter()
         take = np.zeros(S, np.int32)
         for s in range(S):
@@ -678,9 +1048,7 @@ class SNNStreamEngine:
         dispatched = bool(take.sum() > 0)
         t1 = time.perf_counter()
         if dispatched:
-            self._states, self._meta, stats_dev = self._chunk(
-                self._prepared, self._states, self._ring, self._meta
-            )
+            self._states, self._meta, stats_dev = self._dispatch_chunk()
             self._slot_done += take
             self._inflight.append(
                 (stats_dev, take.copy(), list(self._slot_req))
@@ -732,17 +1100,51 @@ class SNNStreamEngine:
         self.trace.span("stats_fetch", t2, t3, track="tick")
         return finished
 
+    def _dispatch_chunk(self):
+        """One supervised chunk dispatch: injected faults raise before
+        the jitted call (so the donated states/meta buffers are still
+        valid on retry), transient failures retry with capped backoff,
+        and persistent fused failures demote the engine to the jnp
+        reference chunk permanently (rebuilding the compiled pair) —
+        see ``repro.faults.supervisor``."""
+        def attempt():
+            if self.injector is not None:
+                self.injector.maybe_raise(self._backend_active)
+            return self._chunk(
+                self._prepared, self._states, self._ring, self._meta
+            )
+
+        def demote():
+            self._backend_active = "jnp"
+            self.backend = "jnp"
+            self._chunk, self._chunk_nodonate = self._build_chunk("jnp")
+            return attempt
+
+        return self._supervisor.call(
+            attempt,
+            backend=self._backend_active,
+            demote=demote if self._backend_active == "fused" else None,
+        )
+
     def _retire(self) -> List[int]:
         """Fetch the oldest in-flight chunk's stats (the tick's single
         D2H transfer) and fold them into per-slot accumulators."""
         stats_dev, take, rids = self._inflight.popleft()
         stats = jax.device_get(stats_dev)
+        fault = stats.get("fault")
         finished = []
         for s in range(self.S):
             if rids[s] is None or take[s] == 0:
                 continue
             if self._slot_req[s] != rids[s]:
                 continue  # slot was freed and re-admitted since dispatch
+            if fault is not None and int(fault[s]) != 0:
+                # poisoned slot: discard this chunk's stats (they may be
+                # NaN), fail the request into a quarantined result, and
+                # free the slot — the other S-1 slots fold normally and
+                # the in-graph sanitization already cleaned the state
+                self._quarantine(s, int(fault[s]))
+                continue
             self._slot_counts[s] += stats["counts"][s]
             self._slot_memsum[s] += stats["memsum"][s]
             self._slot_events[s] += stats["events"][s]
@@ -752,6 +1154,49 @@ class SNNStreamEngine:
             if self._slot_retired[s] >= self._slot_total[s]:
                 finished.append(s)
         return finished
+
+    def _quarantine(self, s: int, code: int) -> None:
+        """Fail slot ``s``'s request into a quarantined result and free
+        the slot.  The request is *not* a completion: it leaves the
+        completed/deadline-miss accounting untouched (documented
+        denominator policy on ``deadline_miss_rate``), and the work it
+        already folded is moved to the quarantined-exclusion counters so
+        ``events_per_sec()`` stays honest."""
+        rid = self._slot_req[s]
+        names = fault_code_names(code)
+        now = time.perf_counter()
+        self._m_q_events.inc(float(self._slot_events[s].sum()))
+        self._m_q_steps.inc(float(self._slot_retired[s]))
+        self._m_quarantined.inc()
+        self.fault_events.append({
+            "tick": self._tick_index,
+            "slot": s,
+            "rid": rid,
+            "code": code,
+            "fault": names,
+        })
+        self.trace.instant(
+            "quarantine", now, track=f"slot{s}",
+            args={"rid": rid, "fault": names},
+        )
+        self._pending_results.append(StreamResult(
+            request_id=rid,
+            prediction=-1,
+            spike_counts=np.zeros(self.cfg.layer_sizes[-1]),
+            steps=int(self._slot_total[s]),
+            latency_s=now - self._slot_submit_t[s],
+            queue_wait_s=self._slot_admit_t[s] - self._slot_submit_t[s],
+            events_per_layer=np.zeros(self.cfg.num_layers),
+            spike_rate=0.0,
+            energy_pj=0.0,
+            deadline_s=self._slot_rel_deadline[s],
+            deadline_missed=False,
+            disposition="quarantined",
+            fault=names,
+            parked=self._slot_parked[s],
+        ))
+        self._slot_req[s] = None
+        self._slot_parked[s] = False
 
     def _finalize(self, s: int) -> StreamResult:
         cfg = self.cfg
@@ -794,36 +1239,80 @@ class SNNStreamEngine:
             energy_pj=oc.energy_pj(),
             deadline_s=self._slot_rel_deadline[s],
             deadline_missed=missed,
+            parked=self._slot_parked[s],
         )
         self._slot_req[s] = None
+        self._slot_parked[s] = False
         return res
 
     # ----------------------------------------------------------- serving
     def idle(self) -> bool:
-        """True when no request is queued, resident in a slot, or awaiting
-        stats retirement."""
+        """True when no request is queued, parked, resident in a slot,
+        awaiting stats retirement, or finished-but-undelivered."""
         return (
             not self._queue
+            and not self._parked
             and all(r is None for r in self._slot_req)
             and not self._inflight
+            and not self._pending_results
         )
 
     def queue_depth(self) -> int:
         return len(self._queue)
 
+    def parked_depth(self) -> int:
+        return len(self._parked)
+
+    def _fill_slot(self, s: int) -> None:
+        """Admit into free slot ``s``: pop the heap in priority/EDF
+        order, shedding (or parking) candidates the feasibility check
+        proves unmeetable, then fall back to the parked FIFO when the
+        heap empties (best-effort service, marked ``parked`` on the
+        result)."""
+        while self._queue:
+            _, rid, req, t_sub, dl = heapq.heappop(self._queue)
+            verdict, reason = self._admission_verdict(req, dl)
+            if verdict == shed_mod.ADMIT:
+                self._admit(s, rid, req, t_sub, dl)
+                return
+            if verdict == shed_mod.PARK:
+                self._park(rid, req, t_sub, dl, reason)
+            else:
+                self._shed(rid, req, t_sub, dl, reason)
+        if self._parked:
+            rid, req, t_sub, dl = self._parked.popleft()
+            self._m_parked_depth.set(len(self._parked))
+            self._admit(s, rid, req, t_sub, dl)
+            self._slot_parked[s] = True
+
     def poll(self) -> List[StreamResult]:
         """One scheduler round: admit queued requests into free slots
-        (priority/EDF order), dispatch the next chunk, retire pipelined
-        stats, and return the requests that finished.  Non-blocking in the
-        scheduling sense: returns [] when the engine is idle."""
+        (priority/EDF order, feasibility-shedding if an admission policy
+        is set), dispatch the next chunk, retire pipelined stats, and
+        return the requests that finished — including shed and
+        quarantined dispositions.  Non-blocking in the scheduling sense:
+        returns [] when the engine is idle."""
         for s in range(self.S):
-            if self._slot_req[s] is None and self._queue:
-                _, rid, req, t_sub, dl = heapq.heappop(self._queue)
-                self._admit(s, rid, req, t_sub, dl)
+            if self._slot_req[s] is None and (
+                self._queue or self._parked
+            ):
+                self._fill_slot(s)
         self._m_qdepth.set(len(self._queue))
-        if all(r is None for r in self._slot_req) and not self._inflight:
-            return []
+        if (
+            all(r is None for r in self._slot_req)
+            and not self._inflight
+        ):
+            results, self._pending_results = self._pending_results, []
+            if results and self.idle() and self._episode_open:
+                self._m_wall.set(time.perf_counter() - self._episode_t0)
+                self._episode_open = False
+            if results:
+                self.timeseries.sample()
+            return results
         results = [self._finalize(s) for s in self._tick()]
+        if self._pending_results:
+            results = self._pending_results + results
+            self._pending_results = []
         if self.idle() and self._episode_open:
             self._m_wall.set(time.perf_counter() - self._episode_t0)
             self._episode_open = False
@@ -833,12 +1322,66 @@ class SNNStreamEngine:
         self.timeseries.sample()
         return results
 
-    def drain(self) -> List[StreamResult]:
-        """Poll until idle; returns results in completion order."""
+    def drain(
+        self, timeout_s: Optional[float] = None
+    ) -> List[StreamResult]:
+        """Poll until idle; returns results in completion order.
+
+        ``timeout_s`` bounds the wall-clock wait: on expiry with the
+        engine still not idle, raises :class:`EngineStallError` carrying
+        a per-slot diagnostic snapshot (``stall_snapshot()``) and the
+        results collected so far — a wedged tick loop used to spin here
+        forever with no evidence of *which* slot stopped moving."""
         results: List[StreamResult] = []
+        t0 = time.perf_counter()
         while not self.idle():
             results.extend(self.poll())
+            if (
+                timeout_s is not None
+                and time.perf_counter() - t0 > timeout_s
+                and not self.idle()
+            ):
+                snap = self.stall_snapshot()
+                stuck = [
+                    d["slot"] for d in snap["slots"]
+                    if d["rid"] is not None
+                ]
+                raise EngineStallError(
+                    f"drain() timed out after {timeout_s}s with the "
+                    f"engine not idle: queue={snap['queue_depth']} "
+                    f"parked={snap['parked_depth']} "
+                    f"inflight={snap['inflight']} "
+                    f"stuck_slots={stuck}",
+                    snap,
+                    results,
+                )
         return results
+
+    def stall_snapshot(self) -> Dict:
+        """Diagnostic view of everything that could be blocking
+        progress: per-slot occupancy (request id, steps dispatched /
+        retired / total, deadline), queue and parked depths, in-flight
+        stats chunks, and the tick index."""
+        return {
+            "tick": self._tick_index,
+            "queue_depth": len(self._queue),
+            "parked_depth": len(self._parked),
+            "inflight": len(self._inflight),
+            "pending_results": len(self._pending_results),
+            "backend": self._backend_active,
+            "slots": [
+                {
+                    "slot": s,
+                    "rid": self._slot_req[s],
+                    "done": int(self._slot_done[s]),
+                    "retired": int(self._slot_retired[s]),
+                    "total": int(self._slot_total[s]),
+                    "deadline_s": self._slot_rel_deadline[s],
+                    "parked": self._slot_parked[s],
+                }
+                for s in range(self.S)
+            ],
+        }
 
     def run(self, requests: List[StreamRequest]) -> List[StreamResult]:
         """Batch-compatibility wrapper over submit()/drain(): serve all
@@ -864,12 +1407,34 @@ class SNNStreamEngine:
             denom = time.perf_counter() - self._episode_t0
         else:
             denom = self.wall_s
-        return self.total_events / max(denom, 1e-9)
+        # quarantined requests' folded work is excluded: a poisoned
+        # request that burned chunks before detection produced no
+        # servable result, so counting its events would inflate
+        # throughput exactly when the engine is misbehaving (shed
+        # requests never reach a slot, so they never enter the numerator
+        # in the first place)
+        ev = self.total_events - self._m_q_events.value
+        return max(ev, 0.0) / max(denom, 1e-9)
 
     def deadline_miss_rate(self) -> float:
-        """Fraction of this episode's completed requests that missed their
-        deadline (requests without a deadline count as met)."""
+        """Fraction of this episode's completed requests that missed
+        their deadline (requests without a deadline count as met).
+
+        Denominator policy: **ok completions only** (parked-then-served
+        requests included).  Shed requests were refused service — they
+        are neither misses nor completions, and surface in
+        ``shed_rate()`` instead; quarantined requests failed for fault
+        reasons, not scheduling reasons, and are excluded from both
+        sides so a chaos run's miss rate remains comparable to a clean
+        run's.
+        """
         return self.deadline_misses / max(self.completed, 1)
+
+    def shed_rate(self) -> float:
+        """Lifetime fraction of submitted requests the admission plane
+        shed (parked requests are not shed — they are served
+        best-effort).  0.0 with no admission policy."""
+        return self._m_shed.value / max(self._m_submitted.value, 1.0)
 
     def reset_tick_stats(self) -> None:
         """Zero the tick-phase instruments (e.g. after a warmup episode,
@@ -921,6 +1486,7 @@ class SNNStreamEngine:
                 [t.shape[0] for t in trains], jnp.int32
             ),
             "admit": jnp.zeros((self.S,), jnp.int32),
+            "fault": jnp.zeros((self.S,), jnp.int32),
         }
         for s, t in enumerate(trains):
             train = jax.device_put(np.asarray(t, np.float32))
