@@ -73,6 +73,16 @@ Schema v5 adds the **fault_tolerance** block (``repro.faults``):
   log, the worst-case injection->quarantine recovery lag in ticks,
   retry/demotion counters and the chaos-vs-clean deadline miss rate.
 
+Schema v6 adds the **static_analysis** block (``repro.analysis``):
+
+- the full repro-lint pass (AST lint over ``src/repro``, Pallas kernel
+  VMEM/SMEM budget + index-map bounds checks, AER address-width
+  bounds) re-run in-process — the findings count must be zero;
+- the recompile contract: the open-loop serving region runs inside a
+  ``RecompileDetector`` tracking the chunk and admit functions
+  (allowlist: zero — warmup owns the cold-start compile), and the
+  engine's own ``steady_state_recompiles()`` counter must be zero.
+
 Emits ``stream_bench.json``; ``--validate`` structurally checks it (and
 its sidecars) and fails on a chunk-throughput collapse vs the BENCH
 baseline, missing/inconsistent histograms, instrumentation overhead
@@ -102,6 +112,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.analysis import RecompileDetector
+from repro.analysis.__main__ import run as analysis_run
 from repro.core import energy, quant, snn
 from repro.events import capacity as cap_mod
 from repro.events import runtime
@@ -116,7 +128,7 @@ RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
-SCHEMA = "stream_bench/v5"
+SCHEMA = "stream_bench/v6"
 # per-request histograms carried since the v3 schema
 HIST_KEYS = (
     "engine.request.latency_s",
@@ -359,17 +371,28 @@ def open_loop_run(
 
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n_req))
     results, i = [], 0
-    start = time.perf_counter()
-    while i < n_req or not engine.idle():
-        now = time.perf_counter() - start
-        while i < n_req and arrivals[i] <= now:
-            engine.submit(reqs[i])
-            i += 1
-        if engine.idle() and i < n_req:
-            time.sleep(max(arrivals[i] - (time.perf_counter() - start), 0.0))
-            continue
-        results.extend(engine.poll())
-    elapsed_s = time.perf_counter() - start
+    # v6: the recompile contract — post-warmup, the open-loop region
+    # must compile *nothing*: the chunk and the admit path were both
+    # compiled by the warmup request, so any cache growth here means a
+    # shape-unstable submit/tick path (the serving hazard repro-lint
+    # exists to catch)
+    detector = RecompileDetector()
+    with detector:
+        detector.track("chunk", engine._chunk, allowed=0)
+        detector.track("admit_spikes", engine._admit_spikes_fn, allowed=0)
+        start = time.perf_counter()
+        while i < n_req or not engine.idle():
+            now = time.perf_counter() - start
+            while i < n_req and arrivals[i] <= now:
+                engine.submit(reqs[i])
+                i += 1
+            if engine.idle() and i < n_req:
+                time.sleep(
+                    max(arrivals[i] - (time.perf_counter() - start), 0.0)
+                )
+                continue
+            results.extend(engine.poll())
+        elapsed_s = time.perf_counter() - start
 
     # aggregate over the collected results, not the engine's episode
     # counters: an arrival gap longer than the service time drains the
@@ -474,6 +497,21 @@ def open_loop_run(
         - fault_tolerance["clean"]["deadline_miss_rate"]
     )
 
+    # v6: the static-analysis contract.  The full repro-lint pass
+    # (AST lint over src/repro + kernel VMEM/SMEM budgets + AER bounds)
+    # runs in-process and must come back clean, and the open-loop
+    # region above must have been recompile-free — both validated
+    sa_report = analysis_run()
+    static_analysis = {
+        "lint_findings": sa_report["counts"]["findings"],
+        "lint_suppressed": sa_report["counts"]["suppressed"],
+        "kernel_vmem_bytes": {
+            p["kernel"]: p["vmem_bytes"] for p in sa_report["kernels"]
+        },
+        "steady_state_recompiles": engine.steady_state_recompiles(),
+        "recompile_detector": detector.report(),
+    }
+
     # sidecar artifacts next to the JSON: the Perfetto-loadable span
     # trace, the full metrics snapshot and the time-series JSONL (CI
     # uploads all three)
@@ -531,6 +569,8 @@ def open_loop_run(
         "slo": slo_report,
         # v5: clean-run zero counters + the seeded chaos probe
         "fault_tolerance": fault_tolerance,
+        # v6: repro-lint pass + recompile contract over the open loop
+        "static_analysis": static_analysis,
         "artifacts": {
             "trace": trace_path.name,
             "metrics": metrics_path.name,
@@ -847,6 +887,39 @@ def validate(path: Path) -> List[str]:
             f"fault_tolerance.chaos.diagnosis invalid: "
             f"{chaos.get('diagnosis')!r}"
         )
+    # v6: static-analysis + recompile contract
+    sa = doc.get("static_analysis", {})
+    if not isinstance(sa, dict) or not sa:
+        errors.append("static_analysis block missing")
+    else:
+        lf = sa.get("lint_findings")
+        if lf != 0:
+            errors.append(
+                f"static_analysis.lint_findings = {lf!r} != 0 — the tree "
+                "must lint clean (fix or suppress with a reason)"
+            )
+        rc = sa.get("steady_state_recompiles")
+        if rc != 0:
+            errors.append(
+                f"static_analysis.steady_state_recompiles = {rc!r} != 0 — "
+                "a dispatch path recompiled mid-serve"
+            )
+        det = sa.get("recompile_detector", {})
+        tracked = det.get("tracked", {}) if isinstance(det, dict) else {}
+        if not tracked:
+            errors.append("static_analysis.recompile_detector.tracked empty")
+        for name, rep in tracked.items():
+            unexpected = rep.get("unexpected")
+            if unexpected is None or unexpected > 0:
+                errors.append(
+                    f"static_analysis: `{name}` compiled "
+                    f"{rep.get('cache_growth')!r} time(s) in the open-loop "
+                    f"region (allowed {rep.get('allowed')!r})"
+                )
+        kv = sa.get("kernel_vmem_bytes")
+        if not isinstance(kv, dict) or not kv:
+            errors.append("static_analysis.kernel_vmem_bytes missing")
+
     # sidecar artifacts exist and are structurally sound
     arts = doc.get("artifacts", {})
     base = Path(path).resolve().parent

@@ -1,0 +1,53 @@
+"""repro-lint: JAX/Pallas-aware static analysis + contract checking.
+
+Two halves:
+
+- :mod:`repro.analysis.jaxlint` — dependency-free AST lint over
+  ``src/repro/**`` (host calls in traced bodies, tracer leaks, traced
+  branching, donation misuse, f64, unshaped BlockSpecs, unused
+  imports, unreachable code) with ``# repro-lint: disable=CODE``
+  suppressions.
+- :mod:`repro.analysis.contracts` / :mod:`repro.analysis.kernel_budget`
+  — runtime/lowering contract checkers: recompilation detection,
+  donation verification, AER address-width bounds, and a captured
+  VMEM/SMEM budget estimate for every Pallas kernel.
+
+CLI: ``python -m repro.analysis [--json report.json]`` — exits nonzero
+on any finding not in the checked-in baseline.
+"""
+
+from .contracts import (
+    ContractViolation,
+    RecompileDetector,
+    aer_bounds_report,
+    check_aer_bounds,
+    donation_report,
+    runtime_donation_check,
+    verify_donation,
+)
+from .jaxlint import RULES, Finding, LintResult, lint_paths, lint_source
+from .kernel_budget import (
+    DEFAULT_SMEM_BUDGET,
+    DEFAULT_VMEM_BUDGET,
+    KernelPlan,
+    check_kernel_budgets,
+)
+
+__all__ = [
+    "ContractViolation",
+    "RecompileDetector",
+    "aer_bounds_report",
+    "check_aer_bounds",
+    "donation_report",
+    "runtime_donation_check",
+    "verify_donation",
+    "RULES",
+    "Finding",
+    "LintResult",
+    "lint_paths",
+    "lint_source",
+    "DEFAULT_SMEM_BUDGET",
+    "DEFAULT_VMEM_BUDGET",
+    "KernelPlan",
+    "check_kernel_budgets",
+]

@@ -1,0 +1,157 @@
+"""``python -m repro.analysis`` — run the full repro-lint pass.
+
+Runs, in order:
+
+1. the AST lint over ``src/repro`` (or the paths given),
+2. the Pallas kernel VMEM/SMEM budget + index-map bounds checks,
+3. the AER address-width bounds check for the collision config.
+
+Emits a text report (and ``--json`` report), then exits 1 if any
+finding is not covered by the checked-in baseline
+(``analysis_baseline.json`` at the repo root — shipped empty: every
+known finding is fixed or carries an inline suppression with a reason).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import contracts, jaxlint, kernel_budget
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_BASELINE = REPO_ROOT / "analysis_baseline.json"
+BASELINE_SCHEMA = "repro-lint-baseline/v1"
+REPORT_SCHEMA = "repro-analysis/v1"
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    doc = json.loads(path.read_text())
+    if doc.get("schema") != BASELINE_SCHEMA:
+        raise SystemExit(f"unrecognised baseline schema in {path}: {doc.get('schema')!r}")
+    return set(doc.get("findings", []))
+
+
+def run(
+    paths: list[str] | None = None,
+    *,
+    with_kernels: bool = True,
+    with_aer: bool = True,
+    vmem_budget: int = kernel_budget.DEFAULT_VMEM_BUDGET,
+    smem_budget: int = kernel_budget.DEFAULT_SMEM_BUDGET,
+) -> dict:
+    """Run the full pass; returns the report dict (no exit/printing).
+
+    Used by the CLI, ``tests/test_analysis.py``, and
+    ``benchmarks/stream_bench.py`` (the v6 ``static_analysis`` block).
+    """
+    lint_paths = [Path(p) for p in (paths or [REPO_ROOT / "src" / "repro"])]
+    result = jaxlint.lint_paths(lint_paths, rel_to=REPO_ROOT)
+
+    plans: list[kernel_budget.KernelPlan] = []
+    if with_kernels:
+        plans, kfindings = kernel_budget.check_kernel_budgets(
+            vmem_budget=vmem_budget, smem_budget=smem_budget
+        )
+        result.findings.extend(kfindings)
+
+    aer_report: dict | None = None
+    if with_aer:
+        from repro.configs.collision_snn import CONFIG
+
+        sizes = list(CONFIG.layer_sizes)
+        aer_report = contracts.aer_bounds_report(sizes)
+        for msg in contracts.check_aer_bounds(sizes):
+            result.findings.append(
+                jaxlint.Finding("src/repro/events/aer.py", 1, 0, "RA401", msg)
+            )
+
+    return {
+        "schema": REPORT_SCHEMA,
+        "paths": [str(p) for p in lint_paths],
+        "findings": [f.to_json() for f in result.findings],
+        "finding_keys": [f.key for f in result.findings],
+        "suppressed": [f.to_json() for f in result.suppressed],
+        "counts": {
+            "findings": len(result.findings),
+            "suppressed": len(result.suppressed),
+        },
+        "kernels": [p.to_json() for p in plans],
+        "aer_bounds": aer_report,
+        "budgets": {"vmem_bytes": vmem_budget, "smem_bytes": smem_budget},
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis", description=__doc__)
+    ap.add_argument("paths", nargs="*", help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--json", dest="json_out", help="write the full JSON report here")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline to accept all current findings",
+    )
+    ap.add_argument("--no-kernels", action="store_true", help="skip kernel budget checks")
+    ap.add_argument("--no-aer", action="store_true", help="skip AER bounds checks")
+    ap.add_argument("--vmem-budget", type=int, default=kernel_budget.DEFAULT_VMEM_BUDGET)
+    ap.add_argument("--smem-budget", type=int, default=kernel_budget.DEFAULT_SMEM_BUDGET)
+    args = ap.parse_args(argv)
+
+    report = run(
+        args.paths or None,
+        with_kernels=not args.no_kernels,
+        with_aer=not args.no_aer,
+        vmem_budget=args.vmem_budget,
+        smem_budget=args.smem_budget,
+    )
+
+    baseline_path = Path(args.baseline)
+    baseline = load_baseline(baseline_path)
+    new = [
+        f for f, k in zip(report["findings"], report["finding_keys"])
+        if k not in baseline
+    ]
+    report["baseline"] = {
+        "path": str(baseline_path),
+        "entries": len(baseline),
+        "new_findings": len(new),
+    }
+    report["counts"]["new"] = len(new)
+
+    if args.update_baseline:
+        baseline_path.write_text(
+            json.dumps(
+                {"schema": BASELINE_SCHEMA, "findings": sorted(set(report["finding_keys"]))},
+                indent=2,
+            )
+            + "\n"
+        )
+        print(f"baseline updated: {len(report['finding_keys'])} entries -> {baseline_path}")
+
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(report, indent=2) + "\n")
+
+    for f in new:
+        print(f"{f['path']}:{f['line']}:{f['col']}: {f['code']} {f['message']}")
+    for p in report["kernels"]:
+        print(
+            f"kernel {p['kernel']}: grid {tuple(p['grid'])}, "
+            f"VMEM {p['vmem_bytes'] / 2**20:.2f} MiB, "
+            f"SMEM {p['smem_bytes'] / 2**10:.0f} KiB"
+        )
+    n_sup = report["counts"]["suppressed"]
+    print(
+        f"repro-lint: {len(new)} new finding(s), "
+        f"{report['counts']['findings'] - len(new)} baselined, {n_sup} suppressed"
+    )
+    if new and not args.update_baseline:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

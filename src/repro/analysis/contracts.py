@@ -1,0 +1,330 @@
+"""Runtime contract checkers for the invariants the lint can't see.
+
+Three checkers, all dependency-free (jax + numpy only):
+
+- :class:`RecompileDetector` — counts XLA backend compiles inside a
+  region (via ``jax.monitoring``) and per-function cache growth (via
+  the jit cache size), against an allowlist of known compile sites.
+  Catches shape-polymorphic submit paths recompiling per request.
+- :func:`donation_report` / :func:`verify_donation` /
+  :func:`runtime_donation_check` — static (lowered-HLO aliasing
+  attrs) and runtime (donated input actually deleted) verification of
+  ``donate_argnums`` discipline.
+- :func:`aer_bounds_report` / :func:`check_aer_bounds` — ties the
+  ``StepEventTable`` address dtype chosen by
+  :func:`repro.events.aer.addr_dtype_for` to the layer widths /
+  capacities it must index, so an int16 table can never silently wrap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+import threading
+from typing import Any, Callable, Iterable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ContractViolation(AssertionError):
+    """A machine-checked invariant does not hold."""
+
+
+# ---------------------------------------------------------------------------
+# recompilation detection
+# ---------------------------------------------------------------------------
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_active_detectors: "set[RecompileDetector]" = set()
+_listener_lock = threading.Lock()
+_listener_installed = False
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    with _listener_lock:
+        if _listener_installed:
+            return
+        try:
+            jax.monitoring.register_event_duration_secs_listener(_dispatch)
+            _listener_installed = True
+        except Exception:  # monitoring API unavailable: cache-size tracking only
+            _listener_installed = True
+
+
+def _dispatch(name: str, duration: float, **kwargs: Any) -> None:
+    if name != _COMPILE_EVENT:
+        return
+    for det in list(_active_detectors):
+        det._backend_compiles += 1
+
+
+def _cache_size(fn: Any) -> int | None:
+    get = getattr(fn, "_cache_size", None)
+    if get is None:
+        return None
+    try:
+        return int(get())
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass
+class _Tracked:
+    fn: Any
+    start: int | None
+    allowed: int
+    end: int | None = None  # frozen at region exit
+
+
+class RecompileDetector:
+    """Count compilations inside a region.
+
+    >>> with RecompileDetector() as det:
+    ...     det.track("step", step_fn, allowed=1)   # cold start is expected
+    ...     serve_lots_of_traffic()
+    >>> det.raise_on_unexpected()
+
+    ``track()`` registers a jitted function whose compile-cache growth
+    is measured; ``allowed`` is that site's compile budget for the
+    region (the allowlist of known compile sites).  ``backend_compiles``
+    additionally counts *every* XLA compile observed process-wide while
+    the detector is active — it catches recompiles of functions nobody
+    thought to track.
+    """
+
+    def __init__(self, max_backend_compiles: int | None = None):
+        self._tracked: dict[str, _Tracked] = {}
+        self._backend_compiles = 0
+        self._max_backend = max_backend_compiles
+        self._entered = False
+
+    # -- region management -------------------------------------------------
+
+    def __enter__(self) -> "RecompileDetector":
+        _install_listener()
+        _active_detectors.add(self)
+        self._entered = True
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        _active_detectors.discard(self)
+        # freeze per-fn growth at region exit: report()/unexpected()
+        # called later must describe the guarded region, not compiles
+        # that legitimately happen after it
+        for t in self._tracked.values():
+            if t.start is not None and t.end is None:
+                t.end = _cache_size(t.fn)
+
+    # -- tracking ----------------------------------------------------------
+
+    def track(self, name: str, fn: Any, allowed: int = 0) -> None:
+        """Register a jitted callable; compile-cache growth beyond
+        ``allowed`` entries is reported as unexpected."""
+        self._tracked[name] = _Tracked(fn, _cache_size(fn), allowed)
+
+    @property
+    def backend_compiles(self) -> int:
+        return self._backend_compiles
+
+    def cache_growth(self, name: str) -> int | None:
+        t = self._tracked[name]
+        if t.start is None:
+            return None
+        now = t.end if t.end is not None else _cache_size(t.fn)
+        return None if now is None else now - t.start
+
+    def report(self) -> dict:
+        per_fn = {}
+        for name in self._tracked:
+            growth = self.cache_growth(name)
+            per_fn[name] = {
+                "cache_growth": growth,
+                "allowed": self._tracked[name].allowed,
+                "unexpected": (growth or 0) - self._tracked[name].allowed
+                if growth is not None
+                else None,
+            }
+        return {
+            "backend_compiles": self._backend_compiles,
+            "max_backend_compiles": self._max_backend,
+            "tracked": per_fn,
+        }
+
+    def unexpected(self) -> list[str]:
+        """Human-readable list of allowlist violations (empty == clean)."""
+        out = []
+        for name, t in self._tracked.items():
+            growth = self.cache_growth(name)
+            if growth is not None and growth > t.allowed:
+                out.append(
+                    f"`{name}` compiled {growth} time(s), allowlist permits "
+                    f"{t.allowed} — shape-unstable inputs?"
+                )
+        if self._max_backend is not None and self._backend_compiles > self._max_backend:
+            out.append(
+                f"{self._backend_compiles} backend compiles observed in region "
+                f"(budget {self._max_backend}) — untracked function recompiling"
+            )
+        return out
+
+    def raise_on_unexpected(self) -> None:
+        bad = self.unexpected()
+        if bad:
+            raise ContractViolation("; ".join(bad))
+
+
+# ---------------------------------------------------------------------------
+# donation / aliasing verification
+# ---------------------------------------------------------------------------
+
+_ARG_ATTR_RE = re.compile(r"%arg(\d+):\s*tensor<[^>]*>\s*(?:\{([^}]*)\})?")
+
+
+def donation_report(fn: Any, *args: Any, **kwargs: Any) -> dict:
+    """Lower ``fn(*args)`` and report which *user argnums* are donated.
+
+    Donation shows up in the lowered module as ``tf.aliasing_output`` /
+    ``jax.buffer_donor`` attributes on flattened ``%argN`` parameters;
+    flat indices are mapped back to user-level positional argnums via
+    each argument's pytree leaf count (best-effort: args that lower to
+    zero leaves shift the mapping).
+    """
+    txt = fn.lower(*args, **kwargs).as_text()
+    main = txt.split("func.func public @main", 1)
+    sig = main[1] if len(main) == 2 else txt
+    # cut at the end of the signature to avoid matching body ops
+    body_at = sig.find("{\n")
+    if body_at > 0:
+        sig = sig[:body_at]
+    donated_flat = set()
+    total_flat = 0
+    for m in _ARG_ATTR_RE.finditer(sig):
+        total_flat = max(total_flat, int(m.group(1)) + 1)
+        attrs = m.group(2) or ""
+        if "tf.aliasing_output" in attrs or "jax.buffer_donor" in attrs:
+            donated_flat.add(int(m.group(1)))
+    # flat index -> user argnum
+    leaf_counts = [len(jax.tree_util.tree_leaves(a)) for a in args]
+    donated_argnums = set()
+    lo = 0
+    for argnum, n in enumerate(leaf_counts):
+        rng = range(lo, lo + n)
+        if n and all(i in donated_flat for i in rng):
+            donated_argnums.add(argnum)
+        lo += n
+    return {
+        "flat_args": total_flat,
+        "donated_flat": sorted(donated_flat),
+        "donated_argnums": sorted(donated_argnums),
+        "leaf_counts": leaf_counts,
+    }
+
+
+def verify_donation(fn: Any, args: Sequence[Any], expect_donated: Iterable[int]) -> dict:
+    """Raise :class:`ContractViolation` unless every argnum in
+    ``expect_donated`` is fully donated in the lowered module."""
+    rep = donation_report(fn, *args)
+    missing = sorted(set(expect_donated) - set(rep["donated_argnums"]))
+    if missing:
+        raise ContractViolation(
+            f"argnums {missing} are not donated in the lowered module "
+            f"(donated: {rep['donated_argnums']})"
+        )
+    return rep
+
+
+def runtime_donation_check(
+    fn: Callable[..., Any], args: Sequence[Any], donated: Iterable[int]
+) -> Any:
+    """Call ``fn(*args)`` and verify the donated inputs were actually
+    consumed (every leaf buffer deleted).  Returns the call's result."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    not_deleted = []
+    for argnum in donated:
+        for leaf in jax.tree_util.tree_leaves(args[argnum]):
+            if hasattr(leaf, "is_deleted") and not leaf.is_deleted():
+                not_deleted.append(argnum)
+                break
+    if not_deleted:
+        raise ContractViolation(
+            f"donated argnums {sorted(set(not_deleted))} still alive after the "
+            "call — donation silently dropped (aliasing mismatch or a second "
+            "reference pinned the buffer)"
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AER address-width bounds
+# ---------------------------------------------------------------------------
+
+
+def aer_bounds_report(
+    layer_sizes: Sequence[int],
+    capacities: Mapping[int, int] | Sequence[int] | None = None,
+    num_steps: int | None = None,
+) -> dict:
+    """Check every ``StepEventTable`` address dtype against the width it
+    must index, and the int8 value / int32 count lanes against their
+    ranges.  Layer 0 is the input plane; layer ``i`` feeds addresses in
+    ``[0, layer_sizes[i])``.
+    """
+    from repro.events import aer
+
+    layers = []
+    ok = True
+    for i, width in enumerate(layer_sizes):
+        dtype = aer.addr_dtype_for(width)
+        max_addr = int(jnp.iinfo(dtype).max)
+        fits = width - 1 <= max_addr
+        ok &= fits
+        cap = None
+        if capacities is not None:
+            try:
+                cap = capacities[i]  # works for both dict and sequence
+            except (KeyError, IndexError):
+                cap = None
+        cap_fits = cap is None or cap <= np.iinfo(np.int32).max
+        ok &= cap_fits
+        layers.append(
+            {
+                "layer": i,
+                "width": int(width),
+                "addr_dtype": np.dtype(dtype).name,
+                "max_addr": max_addr,
+                "addr_fits": bool(fits),
+                "capacity": None if cap is None else int(cap),
+                "count_fits_int32": bool(cap_fits),
+            }
+        )
+    # value lane: spike values are 0/1 (optionally small counts when
+    # merged); int8 holds them as long as per-step multiplicity < 128
+    value_headroom = int(np.iinfo(np.int8).max)
+    if num_steps is not None:
+        ok &= num_steps < 2**31
+    return {"ok": bool(ok), "layers": layers, "value_max": value_headroom}
+
+
+def check_aer_bounds(
+    layer_sizes: Sequence[int],
+    capacities: Mapping[int, int] | Sequence[int] | None = None,
+) -> list[str]:
+    """Return violation strings (empty == clean)."""
+    rep = aer_bounds_report(layer_sizes, capacities)
+    out = []
+    for lay in rep["layers"]:
+        if not lay["addr_fits"]:
+            out.append(
+                f"layer {lay['layer']}: width {lay['width']} overflows "
+                f"{lay['addr_dtype']} addresses (max {lay['max_addr']})"
+            )
+        if not lay["count_fits_int32"]:
+            out.append(
+                f"layer {lay['layer']}: capacity {lay['capacity']} overflows int32 counts"
+            )
+    return out

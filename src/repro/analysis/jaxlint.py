@@ -1,0 +1,699 @@
+"""repro-lint: a dependency-free, JAX/Pallas-aware AST lint.
+
+Walks python sources and flags the footguns that have bitten this repo
+(or would, the moment a PR stops being careful):
+
+=======  ===========================================================
+code     meaning
+=======  ===========================================================
+RL101    host-module call (``np.``/``time.``/``random.``/``os.``/
+         ``print``) inside a ``jax.jit`` / ``pl.pallas_call`` traced
+         body — executes at trace time, bakes values into the graph
+         or silently does nothing per step.
+RL102    tracer leak: ``.item()`` / ``float()`` / ``int()`` /
+         ``bool()`` applied to a traced value inside a jit body —
+         forces a sync or raises ``TracerConversionError``.
+RL103    python ``if``/``while`` branching on a traced value inside a
+         jit body — trace-time specialization; use ``lax.cond`` /
+         ``jnp.where``.  ``x.shape``/``x.dtype``-style static
+         attributes are exempt.
+RL104    ``.at[...].set/add`` on a buffer that was donated to a
+         jitted call earlier in the same block — the buffer may
+         already be aliased/deleted.
+RL105    any other reuse of a donated buffer after the donating call
+         in the same block, without rebinding.
+RL106    float64 in JAX code (``jnp.float64``, ``dtype="float64"``,
+         ``jax_enable_x64``) — this repo is strictly f32/int; host
+         ``np.float64`` bookkeeping is exempt.
+RL107    ``pl.BlockSpec(...)`` with neither an explicit block shape
+         nor an explicit ``memory_space`` — unchecked whole-array
+         staging.
+RL201    unused import (``__init__.py`` re-exports exempt).
+RL202    unreachable code after ``return``/``raise``/``break``/
+         ``continue``.
+RL000    file failed to parse (syntax error).
+=======  ===========================================================
+
+Suppression: put ``# repro-lint: disable=RL101,RL105 -- reason`` on
+(any line of) the flagged statement.  A file-level
+``# repro-lint: disable-file=RL106 -- reason`` in the first ten lines
+suppresses a code for the whole file.  Suppressed findings are counted
+and reported separately; they never fail the run.
+
+The lint is intentionally conservative: it only treats a function as a
+jit context when it can *see* the wrapping (`@jax.jit` decorator,
+``jax.jit(name, ...)``, ``pl.pallas_call(name, ...)`` or
+``pl.pallas_call(partial(name, ...))``, one level of ``alias = name``
+indirection).  Keyword-only parameters of traced functions are treated
+as static (the ``functools.partial``-bound config idiom used by every
+kernel in ``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Iterable, Sequence
+
+RULES: dict[str, str] = {
+    "RL000": "file failed to parse",
+    "RL101": "host-module call inside a traced (jit/pallas) body",
+    "RL102": "tracer leak: item()/float()/int()/bool() on a traced value",
+    "RL103": "python if/while on a traced value inside a jit body",
+    "RL104": ".at[].set on a buffer already donated to a jitted call",
+    "RL105": "donated buffer reused after the donating call",
+    "RL106": "float64 in JAX code (repo is strictly f32/int)",
+    "RL107": "pl.BlockSpec without an explicit block shape",
+    "RL201": "unused import",
+    "RL202": "unreachable code",
+}
+
+#: modules whose *calls* are host-side effects under trace.
+_HOST_MODULES = frozenset({"np", "numpy", "time", "os", "random", "io"})
+#: attribute accesses on tracers that are static at trace time.
+_STATIC_ATTRS = frozenset({"shape", "dtype", "ndim", "size", "weak_type", "sharding"})
+#: builtins that return static values even on tracers.
+_STATIC_CALLS = frozenset({"len", "isinstance", "type", "getattr", "hasattr", "range"})
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable(?:-file)?)\s*=\s*([A-Za-z0-9_,\s]+?)(?:\s*--.*)?$"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Line-number-free identity used for baseline matching."""
+        return f"{self.path}::{self.code}::{self.message}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    suppressed: list[Finding] = dataclasses.field(default_factory=list)
+
+    def merge(self, other: "LintResult") -> None:
+        self.findings.extend(other.findings)
+        self.suppressed.extend(other.suppressed)
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+
+def _parse_suppressions(src: str) -> tuple[dict[int, set[str]], set[str]]:
+    """Return (line -> suppressed codes, file-level suppressed codes)."""
+    per_line: dict[int, set[str]] = {}
+    file_level: set[str] = set()
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(src).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            codes = {c.strip().upper() for c in m.group(2).split(",") if c.strip()}
+            if m.group(1) == "disable-file":
+                if tok.start[0] <= 10:
+                    file_level |= codes
+            else:
+                per_line.setdefault(tok.start[0], set()).update(codes)
+    except tokenize.TokenError:
+        pass
+    return per_line, file_level
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``self._ring`` -> "self._ring"; ``jax.jit`` -> "jax.jit"; else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` references."""
+    d = _dotted(node)
+    return d in ("jax.jit", "jit")
+
+
+def _is_partial_expr(node: ast.AST) -> bool:
+    d = _dotted(node)
+    return d in ("functools.partial", "partial")
+
+
+def _jit_call_static(call: ast.Call) -> tuple[set[str], set[int]]:
+    """Extract static_argnames/static_argnums literals from a jit call."""
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    names.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    nums.add(n.value)
+    return names, nums
+
+
+def _jit_call_donated(call: ast.Call) -> tuple[int, ...]:
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return tuple(
+                n.value
+                for n in ast.walk(kw.value)
+                if isinstance(n, ast.Constant) and isinstance(n.value, int)
+            )
+    return ()
+
+
+@dataclasses.dataclass
+class _JitSpec:
+    kind: str  # "jit" | "pallas"
+    static_names: set[str] = dataclasses.field(default_factory=set)
+    static_nums: set[int] = dataclasses.field(default_factory=set)
+
+
+# ---------------------------------------------------------------------------
+# the linter
+# ---------------------------------------------------------------------------
+
+
+class _Linter:
+    def __init__(self, tree: ast.Module, src: str, path: str):
+        self.tree = tree
+        self.src = src
+        self.path = path
+        self.result = LintResult()
+        self.per_line, self.file_level = _parse_suppressions(src)
+        # module-wide knowledge collected in one pass
+        self.functions: dict[str, list[ast.FunctionDef]] = {}
+        self.jit_specs: dict[str, _JitSpec] = {}
+        self.jit_fn_nodes: dict[int, _JitSpec] = {}  # id(node) -> spec
+        self.aliases: dict[str, str] = {}
+        self.donating: dict[str, tuple[int, ...]] = {}
+
+    # -- emission ----------------------------------------------------------
+
+    def emit(self, node: ast.AST, code: str, message: str) -> None:
+        line = getattr(node, "lineno", 1)
+        col = getattr(node, "col_offset", 0)
+        end = getattr(node, "end_lineno", None) or line
+        f = Finding(self.path, line, col, code, message)
+        if code in self.file_level:
+            self.result.suppressed.append(f)
+            return
+        for ln in range(line, end + 1):
+            if code in self.per_line.get(ln, ()):  # suppression on any line of node
+                self.result.suppressed.append(f)
+                return
+        self.result.findings.append(f)
+
+    # -- pass 1: collect ---------------------------------------------------
+
+    def collect(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, []).append(node)
+                spec = self._decorator_jit_spec(node)
+                if spec is not None:
+                    self.jit_fn_nodes[id(node)] = spec
+                don = self._decorator_donated(node)
+                if don:
+                    self.donating[node.name] = don
+            elif isinstance(node, ast.Assign):
+                self._collect_assign(node)
+            elif isinstance(node, ast.Call):
+                self._collect_call(node)
+        # resolve one/few levels of aliasing: jit target name -> real def name
+        for name, spec in list(self.jit_specs.items()):
+            seen = {name}
+            cur = name
+            for _ in range(5):
+                nxt = self.aliases.get(cur)
+                if nxt is None or nxt in seen:
+                    break
+                seen.add(nxt)
+                cur = nxt
+                if cur not in self.jit_specs:
+                    self.jit_specs[cur] = spec
+        for name, spec in self.jit_specs.items():
+            for fn in self.functions.get(name, ()):
+                self.jit_fn_nodes.setdefault(id(fn), spec)
+
+    def _decorator_jit_spec(self, node: ast.FunctionDef) -> _JitSpec | None:
+        for dec in node.decorator_list:
+            if _is_jit_expr(dec):
+                return _JitSpec("jit")
+            if isinstance(dec, ast.Call):
+                if _is_jit_expr(dec.func):
+                    names, nums = _jit_call_static(dec)
+                    return _JitSpec("jit", names, nums)
+                if _is_partial_expr(dec.func) and dec.args and _is_jit_expr(dec.args[0]):
+                    names, nums = _jit_call_static(dec)
+                    return _JitSpec("jit", names, nums)
+        return None
+
+    def _decorator_donated(self, node: ast.FunctionDef) -> tuple[int, ...]:
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and (
+                _is_jit_expr(dec.func)
+                or (_is_partial_expr(dec.func) and dec.args and _is_jit_expr(dec.args[0]))
+            ):
+                don = _jit_call_donated(dec)
+                if don:
+                    return don
+        return ()
+
+    def _collect_assign(self, node: ast.Assign) -> None:
+        # name aliasing: a = b
+        if isinstance(node.value, ast.Name):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.aliases[tgt.id] = node.value.id
+        # donating callables: X = jax.jit(fn, donate_argnums=(...))
+        if isinstance(node.value, ast.Call) and _is_jit_expr(node.value.func):
+            don = _jit_call_donated(node.value)
+            if don:
+                for tgt in node.targets:
+                    nm = _dotted(tgt)
+                    if nm:
+                        self.donating[nm] = don
+
+    def _collect_call(self, node: ast.Call) -> None:
+        d = _dotted(node.func)
+        if d in ("jax.jit", "jit") and node.args:
+            target = node.args[0]
+            names, nums = _jit_call_static(node)
+            if isinstance(target, ast.Name):
+                self.jit_specs[target.id] = _JitSpec("jit", names, nums)
+            elif isinstance(target, ast.Lambda):
+                self.jit_fn_nodes[id(target)] = _JitSpec("jit", names, nums)
+        elif d in ("pl.pallas_call", "pallas_call", "pltpu.pallas_call") and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Call) and _is_partial_expr(target.func) and target.args:
+                # partial(kernel, **static_config): bound kwargs are static
+                inner = target.args[0]
+                if isinstance(inner, ast.Name):
+                    self.jit_specs[inner.id] = _JitSpec(
+                        "pallas", {kw.arg for kw in target.keywords if kw.arg}
+                    )
+            elif isinstance(target, ast.Name):
+                self.jit_specs[target.id] = _JitSpec("pallas")
+
+    # -- pass 2: rules -----------------------------------------------------
+
+    def run(self) -> LintResult:
+        self.collect()
+        for node in ast.walk(self.tree):
+            if id(node) in self.jit_fn_nodes and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+            ):
+                self._check_traced_body(node, self.jit_fn_nodes[id(node)])
+            if isinstance(node, ast.Call):
+                self._check_blockspec(node)
+        self._check_f64()
+        self._check_donation_flow()
+        self._check_unused_imports()
+        self._check_unreachable()
+        return self.result
+
+    # RL101/RL102/RL103 ----------------------------------------------------
+
+    def _traced_params(self, fn, spec: _JitSpec) -> set[str]:
+        if isinstance(fn, ast.Lambda):
+            args = fn.args
+        else:
+            args = fn.args
+        pos = [a.arg for a in (*args.posonlyargs, *args.args)]
+        traced = {
+            nm
+            for i, nm in enumerate(pos)
+            if i not in spec.static_nums and nm not in spec.static_names
+        }
+        if args.vararg is not None:
+            traced.add(args.vararg.arg)
+        # kw-only params are the partial-bound static-config idiom
+        traced.discard("self")
+        return traced
+
+    def _refs_traced(self, node: ast.AST, traced: set[str]) -> bool:
+        """Does `node` reference a traced name, ignoring static attrs?"""
+        if isinstance(node, ast.Attribute) and node.attr in _STATIC_ATTRS:
+            return False
+        if isinstance(node, ast.Call):
+            fname = _dotted(node.func)
+            if fname in _STATIC_CALLS:
+                return False
+        if isinstance(node, ast.Name):
+            return node.id in traced
+        return any(self._refs_traced(c, traced) for c in ast.iter_child_nodes(node))
+
+    def _check_traced_body(self, fn, spec: _JitSpec) -> None:
+        traced = self._traced_params(fn, spec)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    self._check_host_call(node)
+                    self._check_tracer_leak(node, traced)
+                elif isinstance(node, (ast.If, ast.While)):
+                    if self._refs_traced(node.test, traced):
+                        kw = "while" if isinstance(node, ast.While) else "if"
+                        self.emit(
+                            node,
+                            "RL103",
+                            f"python `{kw}` on traced value inside traced body of "
+                            f"`{getattr(fn, 'name', '<lambda>')}` — use lax.cond/jnp.where",
+                        )
+
+    def _check_host_call(self, call: ast.Call) -> None:
+        d = _dotted(call.func)
+        if d is None:
+            return
+        root = d.split(".", 1)[0]
+        if root in _HOST_MODULES:
+            self.emit(
+                call,
+                "RL101",
+                f"host call `{d}(...)` inside traced body — runs at trace "
+                "time only (use jnp/lax, or hoist out of the jit)",
+            )
+        elif d == "print":
+            self.emit(
+                call,
+                "RL101",
+                "`print(...)` inside traced body — prints at trace time only "
+                "(use jax.debug.print)",
+            )
+
+    def _check_tracer_leak(self, call: ast.Call, traced: set[str]) -> None:
+        d = _dotted(call.func)
+        if (
+            isinstance(call.func, ast.Attribute)
+            and call.func.attr == "item"
+            and not call.args
+        ):
+            self.emit(
+                call,
+                "RL102",
+                ".item() inside traced body — host sync / tracer error",
+            )
+            return
+        if d in ("float", "int", "bool") and len(call.args) == 1:
+            arg = call.args[0]
+            if isinstance(arg, ast.Constant):
+                return
+            if self._refs_traced(arg, traced):
+                self.emit(
+                    call,
+                    "RL102",
+                    f"`{d}()` on a traced value inside traced body — "
+                    "tracer leak (use astype / lax primitives)",
+                )
+
+    # RL107 ----------------------------------------------------------------
+
+    def _check_blockspec(self, call: ast.Call) -> None:
+        d = _dotted(call.func)
+        if d not in ("pl.BlockSpec", "pallas.BlockSpec", "BlockSpec"):
+            return
+        kwargs = {kw.arg for kw in call.keywords if kw.arg}
+        if not call.args and not ({"block_shape", "memory_space"} & kwargs):
+            self.emit(
+                call,
+                "RL107",
+                "pl.BlockSpec without an explicit block shape or memory_space "
+                "— whole-array staging with no budget accounting",
+            )
+
+    # RL106 ----------------------------------------------------------------
+
+    def _check_f64(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                root = _dotted(node)
+                if root in ("jnp.float64", "jax.numpy.float64"):
+                    self.emit(node, "RL106", "jnp.float64 — repo is strictly f32/int")
+            elif isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d in ("jax.config.update", "config.update") and node.args:
+                    a0 = node.args[0]
+                    if isinstance(a0, ast.Constant) and a0.value == "jax_enable_x64":
+                        self.emit(node, "RL106", "jax_enable_x64 — repo is strictly f32/int")
+            elif isinstance(node, ast.keyword) and node.arg == "dtype":
+                v = node.value
+                if isinstance(v, ast.Constant) and v.value == "float64":
+                    self.emit(v, "RL106", 'dtype="float64" — repo is strictly f32/int')
+
+    # RL104/RL105 ----------------------------------------------------------
+
+    def _check_donation_flow(self) -> None:
+        if not self.donating:
+            return
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_block(node.body, set())
+
+    def _node_donating_calls(self, node: ast.AST) -> list[ast.Call]:
+        out = []
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                d = _dotted(n.func)
+                if d in self.donating:
+                    out.append(n)
+        return out
+
+    _COMPOUND = (ast.For, ast.AsyncFor, ast.While, ast.If, ast.With, ast.AsyncWith, ast.Try)
+
+    def _scan_block(self, stmts: list[ast.stmt], dead: set[str]) -> set[str]:
+        """Flow the donated-and-dead set through a statement list.
+
+        Compound statements are scanned per sub-block (a loop that
+        rebinds its donated buffers from the call outputs — the engine's
+        admit loop — resurrects them for the code after the loop);
+        the exit set is the union of every branch's exit set (a donation
+        on *any* path kills the buffer conservatively).  Returns the
+        dead set at block exit.
+        """
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue  # nested defs get their own fresh scan
+            if isinstance(stmt, self._COMPOUND):
+                headers: list[ast.AST] = []
+                if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                    headers = [stmt.iter]
+                elif isinstance(stmt, (ast.While, ast.If)):
+                    headers = [stmt.test]
+                elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                    headers = [item.context_expr for item in stmt.items]
+                for h in headers:
+                    self._apply_simple(h, dead, rebind_targets=[])
+                exits = [set(dead)]
+                for blk in self._sub_blocks(stmt):
+                    exits.append(self._scan_block(list(blk), set(dead)))
+                dead = set().union(*exits)
+                continue
+            targets: list[ast.AST] = []
+            if isinstance(stmt, ast.Assign):
+                targets = list(stmt.targets)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                targets = [stmt.target]
+            elif isinstance(stmt, ast.Delete):
+                targets = list(stmt.targets)
+            self._apply_simple(stmt, dead, rebind_targets=targets)
+        return dead
+
+    @staticmethod
+    def _sub_blocks(stmt: ast.stmt):
+        for field in ("body", "orelse", "finalbody"):
+            blk = getattr(stmt, field, None)
+            if isinstance(blk, list) and blk:
+                yield blk
+        for h in getattr(stmt, "handlers", ()) or ():
+            yield h.body
+
+    def _apply_simple(
+        self, node: ast.AST, dead: set[str], rebind_targets: list[ast.AST]
+    ) -> None:
+        """One straight-line step: flag dead uses, apply donations,
+        then resurrect rebound names."""
+        calls = self._node_donating_calls(node)
+        donated_here: set[int] = set()
+        for call in calls:
+            for a in call.args:
+                donated_here.add(id(a))
+        if dead:
+            self._flag_dead_uses(node, dead, donated_here)
+        for call in calls:
+            for pos in self.donating[_dotted(call.func)]:
+                if pos < len(call.args):
+                    nm = _dotted(call.args[pos])
+                    if nm:
+                        dead.add(nm)
+        for tgt in rebind_targets:
+            for t in ast.walk(tgt):
+                nm = _dotted(t)
+                if nm is not None:
+                    dead.discard(nm)
+
+    def _flag_dead_uses(
+        self, stmt: ast.AST, dead: set[str], donated_here: set[int]
+    ) -> None:
+        for node in ast.walk(stmt):
+            if id(node) in donated_here:
+                continue  # passing the buffer into the next donating call is the point
+            if isinstance(node, ast.Attribute) and node.attr == "at":
+                nm = _dotted(node.value)
+                if nm in dead:
+                    self.emit(
+                        node,
+                        "RL104",
+                        f"`.at[]` update on `{nm}` after it was donated — "
+                        "buffer is aliased/deleted",
+                    )
+                    return
+        for node in ast.walk(stmt):
+            if id(node) in donated_here:
+                continue
+            if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load
+            ):
+                nm = _dotted(node)
+                if nm in dead:
+                    self.emit(
+                        node,
+                        "RL105",
+                        f"`{nm}` reused after being donated to a jitted call "
+                        "— rebind it from the call's outputs first",
+                    )
+                    dead.discard(nm)  # one finding per buffer per block
+                    return
+
+    # RL201 ----------------------------------------------------------------
+
+    def _check_unused_imports(self) -> None:
+        if Path(self.path).name == "__init__.py":
+            return
+        imported: dict[str, ast.stmt] = {}
+        for node in self.tree.body:
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    name = alias.asname or alias.name.split(".")[0]
+                    imported[name] = node
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "__future__":
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    imported[alias.asname or alias.name] = node
+        if not imported:
+            return
+        used: set[str] = set()
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+                # __all__ entries, string annotations, doctest-ish refs
+                if node.value.isidentifier():
+                    used.add(node.value)
+        for name, node in imported.items():
+            if name not in used:
+                self.emit(node, "RL201", f"unused import `{name}`")
+
+    # RL202 ----------------------------------------------------------------
+
+    def _check_unreachable(self) -> None:
+        terminal = (ast.Return, ast.Raise, ast.Break, ast.Continue)
+        for node in ast.walk(self.tree):
+            for field in ("body", "orelse", "finalbody"):
+                blk = getattr(node, field, None)
+                if not isinstance(blk, list):
+                    continue
+                for i, stmt in enumerate(blk[:-1]):
+                    if isinstance(stmt, terminal):
+                        self.emit(
+                            blk[i + 1],
+                            "RL202",
+                            f"unreachable code after `{type(stmt).__name__.lower()}`",
+                        )
+                        break
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str = "<string>") -> LintResult:
+    """Lint one python source string; returns findings + suppressed."""
+    result = LintResult()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        result.findings.append(
+            Finding(path, e.lineno or 1, e.offset or 0, "RL000", f"syntax error: {e.msg}")
+        )
+        return result
+    return _Linter(tree, src, path).run()
+
+
+def iter_py_files(paths: Sequence[Path | str]) -> Iterable[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            yield from sorted(p.rglob("*.py"))
+        elif p.suffix == ".py":
+            yield p
+
+
+def lint_paths(paths: Sequence[Path | str], rel_to: Path | str | None = None) -> LintResult:
+    """Lint every ``*.py`` under ``paths``; paths in findings are relative
+    to ``rel_to`` when given (so baselines are location-independent)."""
+    agg = LintResult()
+    root = Path(rel_to) if rel_to is not None else None
+    for f in iter_py_files(paths):
+        try:
+            src = f.read_text()
+        except OSError as e:  # unreadable file is itself a finding
+            agg.findings.append(Finding(str(f), 1, 0, "RL000", f"unreadable: {e}"))
+            continue
+        shown = str(f)
+        if root is not None:
+            try:
+                shown = str(f.resolve().relative_to(root.resolve()))
+            except ValueError:
+                pass
+        agg.merge(lint_source(src, shown))
+    return agg

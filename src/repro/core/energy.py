@@ -19,7 +19,6 @@ Energy table (pJ), 45nm:
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Sequence
 
 # pJ per operation (Horowitz ISSCC'14, 45nm)

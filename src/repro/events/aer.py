@@ -203,6 +203,24 @@ def addr_dtype_for(num_addrs: int):
     return jnp.int16 if num_addrs <= jnp.iinfo(jnp.int16).max else jnp.int32
 
 
+def check_addr_dtype(num_addrs: int, addr_dtype) -> None:
+    """Raise (loudly, at trace/build time) if ``addr_dtype`` cannot index
+    ``num_addrs`` addresses.
+
+    ``astype(int16)`` on out-of-range addresses silently wraps to
+    negative — a table built that way scatters events to the wrong
+    neurons with no error anywhere downstream.  Every packing path must
+    call this before narrowing.
+    """
+    info = jnp.iinfo(addr_dtype)
+    if num_addrs - 1 > int(info.max):
+        raise ValueError(
+            f"address dtype {jnp.dtype(addr_dtype).name} cannot index "
+            f"{num_addrs} addresses (max {int(info.max) + 1}): int16 AER "
+            "tables silently wrap — use addr_dtype_for(num_addrs) or int32"
+        )
+
+
 def step_table_to_dense(table: StepEventTable, num_addrs: int) -> Array:
     """Scatter a per-step event table back to a dense (..., T, N) train.
 

@@ -147,6 +147,9 @@ def encode_step_table(
     addrs, values, counts = step_events(spikes, capacity)
     if addr_dtype is None:
         addr_dtype = aer.addr_dtype_for(spikes.shape[-1])
+    # a layer wider than the dtype's range would silently wrap addresses
+    # negative at astype(); fail at trace time instead
+    aer.check_addr_dtype(spikes.shape[-1], addr_dtype)
     return aer.StepEventTable(
         addrs=addrs.astype(addr_dtype),
         values=values.astype(jnp.int8),

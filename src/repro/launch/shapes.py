@@ -15,7 +15,7 @@ axes for every model input — weak-type-correct, shardable, no allocation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

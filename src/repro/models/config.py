@@ -7,7 +7,7 @@ per-arch files in repro/configs instantiate it with published numbers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,7 @@ distributed/partitioning.py to derive PartitionSpecs).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

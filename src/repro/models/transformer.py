@@ -16,8 +16,7 @@ Remat policy (`cfg.remat`) wraps the scan body.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -33,7 +33,7 @@ from __future__ import annotations
 import bisect
 import json
 import math
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Union
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry"]
 

@@ -41,7 +41,7 @@ import json
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.metrics import Gauge, Histogram, MetricsRegistry
 
 __all__ = ["Sample", "TimeSeriesSampler"]
 

@@ -10,7 +10,7 @@ cache are per-row, so no recompile).  Greedy or temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp

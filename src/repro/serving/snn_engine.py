@@ -269,6 +269,10 @@ class SNNStreamEngine:
         self._ring_steps = max(int(cfg.num_steps), chunk_steps)
 
         self._chunk, self._chunk_nodonate = self._build_chunk(backend)
+        # compile-site allowlist: one cold-start compile of the fresh
+        # chunk; _grow_ring and demotion bump/reset it (known sites)
+        self._chunk_compiles_expected = 1
+        self._chunk_compiles_accounted = 0
         self._make_admit_fns()
         self._reset_all()
 
@@ -523,6 +527,9 @@ class SNNStreamEngine:
         self._ring = {
             k: new[k].at[:, :r_old].set(old[k]) for k in new
         }
+        # a larger ring is a new chunk input shape: one more compile is
+        # a known site, not a steady-state recompile
+        self._chunk_compiles_expected += 1
 
     # ----------------------------------------------------- observability
     def _make_instruments(
@@ -584,6 +591,10 @@ class SNNStreamEngine:
         self._m_retries = m.counter("engine.faults.chunk_retries")
         self._m_demoted = m.counter("engine.faults.backend_demoted")
         self._m_injected = m.counter("engine.faults.injected")
+        # steady-state recompiles: chunk compile-cache growth beyond the
+        # allowlisted sites (cold start, ring growth, demotion rebuild);
+        # any increment means a shape-unstable dispatch path
+        self._m_recompiles = m.counter("engine.tick.recompiles")
         self._m_q_events = m.counter("engine.episode.quarantined_events")
         self._m_q_steps = m.counter("engine.episode.quarantined_steps")
         self._m_parked_depth = m.gauge("engine.queue.parked")
@@ -637,6 +648,7 @@ class SNNStreamEngine:
         demoted = self._m_demoted.value
         retries = self._m_retries.value
         shed = self._m_shed.value
+        recompiles = int(self._m_recompiles.value)
         window = self.timeseries.ratio(
             "engine.requests.shed", "engine.requests.submitted", 10.0
         )
@@ -665,9 +677,17 @@ class SNNStreamEngine:
         else:
             verdict = "nominal"
             hint = "no action needed"
+        if recompiles > 0:
+            hint += (
+                "; WARNING: steady-state chunk recompiles observed "
+                f"({recompiles}) — a dispatch path is shape-unstable "
+                "(every compile stalls serving for the full trace+compile)"
+            )
         return {
             "verdict": verdict,
             "hint": hint,
+            "recompiling": recompiles > 0,
+            "steady_state_recompiles": recompiles,
             "shed_total": shed,
             "windowed_shed_rate": window,
             "parked_depth": len(self._parked),
@@ -1053,6 +1073,7 @@ class SNNStreamEngine:
             self._inflight.append(
                 (stats_dev, take.copy(), list(self._slot_req))
             )
+            self._note_chunk_compiles()
         t2 = time.perf_counter()
         finished: List[int] = []
         # keep at most pipeline_depth chunks' stats in flight; when
@@ -1100,6 +1121,29 @@ class SNNStreamEngine:
         self.trace.span("stats_fetch", t2, t3, track="tick")
         return finished
 
+    def _note_chunk_compiles(self) -> None:
+        """Fold chunk compile-cache growth beyond the allowlisted sites
+        (cold start, ring growth, demotion rebuild) into the
+        ``engine.tick.recompiles`` counter — the repro-lint recompile
+        contract (``repro.analysis.contracts.RecompileDetector`` wraps
+        the same signal for tests/benchmarks)."""
+        get = getattr(self._chunk, "_cache_size", None)
+        if get is None:
+            return
+        try:
+            size = int(get())
+        except Exception:
+            return
+        extra = size - self._chunk_compiles_expected
+        if extra > self._chunk_compiles_accounted:
+            self._m_recompiles.inc(extra - self._chunk_compiles_accounted)
+            self._chunk_compiles_accounted = extra
+
+    def steady_state_recompiles(self) -> int:
+        """Chunk recompiles beyond the known compile sites (lifetime);
+        nonzero means some dispatch path is shape-unstable."""
+        return int(self._m_recompiles.value)
+
     def _dispatch_chunk(self):
         """One supervised chunk dispatch: injected faults raise before
         the jitted call (so the donated states/meta buffers are still
@@ -1118,6 +1162,9 @@ class SNNStreamEngine:
             self._backend_active = "jnp"
             self.backend = "jnp"
             self._chunk, self._chunk_nodonate = self._build_chunk("jnp")
+            # fresh jit object: its cold-start compile is a known site
+            self._chunk_compiles_expected = 1
+            self._chunk_compiles_accounted = 0
             return attempt
 
         return self._supervisor.call(
@@ -1490,7 +1537,10 @@ class SNNStreamEngine:
         }
         for s, t in enumerate(trains):
             train = jax.device_put(np.asarray(t, np.float32))
-            ring, meta = self._admit_spikes_fn(ring, meta, train, s)
+            # same slot dtype as _admit(): a bare python int would hit a
+            # separate (weak-typed) jit cache entry and recompile
+            slot = jax.device_put(np.int32(s))
+            ring, meta = self._admit_spikes_fn(ring, meta, train, slot)
         meta = {**meta, "admit": jnp.zeros((self.S,), jnp.int32)}
         return self._prepared, states, ring, meta
 
