@@ -18,10 +18,14 @@ across runs when the previous artifact is restored):
   the feasibility shedder is rejecting more),
 - ``chaos_miss_rate`` — deadline miss rate among the chaos probe's
   served requests (lower is better; with shedding on, hopeless
-  deadlines shed instead of missing, so this should sit near zero).
+  deadlines shed instead of missing, so this should sit near zero),
+- ``recovery_restore_us`` — the v7 warm-restart cost: wall time to
+  restore a full engine snapshot (lower is better; a rising trend
+  means crash recovery is getting slower).
 
-Both fault-tolerance metrics are absent from pre-v5 artifacts; the
-trend check skips metrics a run did not record.
+Fault-tolerance metrics are absent from pre-v5 artifacts and the
+recovery metric from pre-v7 ones; the trend check skips metrics a run
+did not record.
 
 ``check`` compares the newest entry against the **rolling median** of
 the preceding window (default 8 runs) per metric, direction-aware, and
@@ -62,6 +66,7 @@ METRICS = {
     "bench_steps_per_s": "up",
     "shed_rate": "down",
     "chaos_miss_rate": "down",
+    "recovery_restore_us": "down",
 }
 
 
@@ -90,6 +95,12 @@ def headline(
         entry["chaos_miss_rate"] = chaos["deadline_miss_rate"]
     if isinstance(chaos.get("quarantined"), int):
         entry["chaos_quarantined"] = chaos["quarantined"]
+    # v7 crash-safety headline: warm-restart cost (absent pre-v7)
+    rec = doc.get("recovery", {})
+    if isinstance(rec.get("restore_us"), (int, float)):
+        entry["recovery_restore_us"] = rec["restore_us"]
+    if isinstance(rec.get("preemptions"), int):
+        entry["recovery_preemptions"] = rec["preemptions"]
     if bench_path and Path(bench_path).exists():
         ref = json.loads(Path(bench_path).read_text())
         entry["bench_steps_per_s"] = (

@@ -83,6 +83,19 @@ Schema v6 adds the **static_analysis** block (``repro.analysis``):
   (allowlist: zero — warmup owns the cold-start compile), and the
   engine's own ``steady_state_recompiles()`` counter must be zero.
 
+Schema v7 adds the **recovery** block (crash safety):
+
+- snapshot/warm-restart: the engine is snapshotted mid-flight
+  (``snapshot_auto`` rotation, twice), the newest snapshot is
+  byte-corrupted, and a fresh engine ``restore_latest_snapshot``s —
+  the checksum must catch the corruption (fallback counter == injected
+  corruptions) and the survivor's drained results must be bit-exact
+  against an uninterrupted oracle (``resume_parity``); save/restore
+  costs are reported in µs from the engine's own histograms;
+- preemption: an urgent tight-deadline arrival on a full ``preempt=
+  True`` engine must park a resident slot and later restore it
+  bit-exactly; park/restore round-trip µs per slot are reported.
+
 Emits ``stream_bench.json``; ``--validate`` structurally checks it (and
 its sidecars) and fails on a chunk-throughput collapse vs the BENCH
 baseline, missing/inconsistent histograms, instrumentation overhead
@@ -128,7 +141,7 @@ RATES = (0.0, 0.05, 0.1, 0.25, 0.5, 0.75, 1.0)
 
 REPO_ROOT = Path(__file__).resolve().parents[1]
 DEFAULT_JSON = REPO_ROOT / "stream_bench.json"
-SCHEMA = "stream_bench/v6"
+SCHEMA = "stream_bench/v7"
 # per-request histograms carried since the v3 schema
 HIST_KEYS = (
     "engine.request.latency_s",
@@ -175,6 +188,155 @@ FT_CLEAN_ZERO_KEYS = (
     "engine.faults.backend_demoted",
     "engine.faults.injected",
 )
+# v7 recovery probe geometry: snapshot/warm-restart + preemption costs
+# on the same collision config, with one seeded checkpoint corruption
+RC_REQUESTS = 6
+RC_CORRUPTIONS = 1
+
+
+def _recovery_run(cfg, params, capacities) -> Dict:
+    """Crash-safety probe for the v7 ``recovery`` block.
+
+    Measures the engine's recovery-plane costs on the same collision
+    config as the open-loop run: rotating snapshot writes on a loaded
+    engine, warm-restart restore into a fresh engine (after a seeded
+    byte-corruption of the newest snapshot — the restore must fall back
+    to the previous one), and deadline-aware preemption park/restore
+    round-trips.  Both the warm-restarted and the preempting engine are
+    held to bit-exact parity with an uninterrupted oracle run
+    (``resume_parity`` / ``preempt_parity``).
+    """
+    import shutil
+    import tempfile
+    import warnings as _warnings
+
+    from repro.faults import corrupt_checkpoint
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    slots, Tc = 4, 5
+    K = cfg.layer_sizes[0]
+    rng = np.random.default_rng(2)
+    trains = [
+        (rng.random((cfg.num_steps, K)) < 0.2).astype(np.float32)
+        for _ in range(RC_REQUESTS)
+    ]
+
+    def mk(preempt=False):
+        return SNNStreamEngine(
+            params, cfg, num_slots=slots, chunk_steps=Tc, backend="jnp",
+            capacities=capacities, preempt=preempt,
+        )
+
+    def parity(results, oracle) -> bool:
+        got = {r.request_id: r for r in results}
+        if sorted(got) != sorted(oracle):
+            return False
+        return all(
+            np.array_equal(got[i].spike_counts, oracle[i].spike_counts)
+            and np.array_equal(
+                got[i].events_per_layer, oracle[i].events_per_layer
+            )
+            and got[i].prediction == oracle[i].prediction
+            and got[i].energy_pj == oracle[i].energy_pj
+            for i in oracle
+        )
+
+    # oracle: the same engine instance serves the reference pass, then
+    # (counters reset by run()) the snapshot pass — one chunk compile
+    eng = mk()
+    ref = eng.run([StreamRequest(spikes=t) for t in trains])
+    # request ids keep counting up across passes on the same engine;
+    # rebase every pass onto 0..n-1 window indices before comparing
+    base = min(r.request_id for r in ref)
+    oracle = {r.request_id - base: r for r in ref}
+
+    snap_dir = tempfile.mkdtemp(prefix="stream_bench_recovery_")
+    try:
+        first_rid = eng._next_rid
+        for t in trains:
+            eng.submit(StreamRequest(spikes=t))
+        eng.poll()
+        eng.poll()
+        # two rotation snapshots mid-flight (nothing has completed yet:
+        # each window needs cfg.num_steps/Tc chunks plus the pipeline)
+        eng.snapshot_auto(snap_dir)
+        eng.poll()
+        eng.snapshot_auto(snap_dir)
+        src_snap = eng.metrics_snapshot()
+        save_h = src_snap["engine.snapshot.save_s"]
+        snapshot_us = 1e6 * save_h["sum"] / max(save_h["count"], 1)
+
+        # corrupt the newest snapshot: restore_latest_snapshot must fall
+        # back to the previous one in the rotation, loudly but cleanly
+        corrupt_checkpoint(snap_dir, seed=FT_SEED)
+        surv = mk()
+        with _warnings.catch_warnings():
+            _warnings.simplefilter("ignore")
+            restored_path = surv.restore_latest_snapshot(snap_dir)
+        surv_snap = surv.metrics_snapshot()
+        fallbacks = int(
+            surv_snap["engine.faults.checkpoint_fallback"]["value"]
+        )
+        rest_h = surv_snap["engine.snapshot.restore_s"]
+        restore_us = 1e6 * rest_h["sum"] / max(rest_h["count"], 1)
+        resumed = [
+            dataclasses_replace_rid(r, r.request_id - first_rid)
+            for r in surv.drain()
+        ]
+        resume_parity = restored_path is not None and parity(
+            resumed, oracle
+        )
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+    # preemption probe: fill every slot with loose windows, then land a
+    # strictly tighter one — the loosest resident window parks, the
+    # urgent one runs, the parked one resumes; all bit-exact
+    ep = mk(preempt=True)
+    pre_rid = ep._next_rid
+    for t in trains[:slots]:
+        ep.submit(StreamRequest(spikes=t))
+    ep.poll()
+    ep.submit(
+        StreamRequest(spikes=trains[slots], priority=5, deadline_s=2.0)
+    )
+    for t in trains[slots + 1:]:
+        ep.submit(StreamRequest(spikes=t))
+    pre_results = [
+        dataclasses_replace_rid(r, r.request_id - pre_rid)
+        for r in ep.drain(timeout_s=120.0)
+    ]
+    ep_snap = ep.metrics_snapshot()
+    park_h = ep_snap["engine.preempt.park_s"]
+    unpark_h = ep_snap["engine.preempt.restore_s"]
+    park_us = 1e6 * park_h["sum"] / max(park_h["count"], 1)
+    unpark_us = 1e6 * unpark_h["sum"] / max(unpark_h["count"], 1)
+    return {
+        "requests": RC_REQUESTS,
+        "snapshot_us": float(snapshot_us),
+        "restore_us": float(restore_us),
+        "snapshots_written": int(save_h["count"]),
+        "injected_corruptions": RC_CORRUPTIONS,
+        "checkpoint_fallbacks": fallbacks,
+        "resume_parity": bool(resume_parity),
+        "preemptions": int(ep_snap["engine.preempt.parked"]["value"]),
+        "preempt_resumes": int(
+            ep_snap["engine.preempt.resumed"]["value"]
+        ),
+        "preempt_park_us": float(park_us),
+        "preempt_restore_us": float(unpark_us),
+        "preempt_round_trip_us": float(park_us + unpark_us),
+        "preempt_parity": parity(pre_results, oracle),
+    }
+
+
+def dataclasses_replace_rid(r, rid: int):
+    """Rebase a StreamResult's request id onto a run-local index (the
+    recovery probe reuses one engine across passes, so raw ids keep
+    counting up)."""
+    import dataclasses as _dc
+
+    return _dc.replace(r, request_id=rid)
 
 
 def _fault_tolerance_run(cfg, params, capacities) -> Dict:
@@ -497,6 +659,10 @@ def open_loop_run(
         - fault_tolerance["clean"]["deadline_miss_rate"]
     )
 
+    # v7: crash-safety evidence — snapshot/warm-restart costs and
+    # parity, checkpoint-corruption fallback, preemption round-trips
+    recovery = _recovery_run(cfg, params, plan.capacities)
+
     # v6: the static-analysis contract.  The full repro-lint pass
     # (AST lint over src/repro + kernel VMEM/SMEM budgets + AER bounds)
     # runs in-process and must come back clean, and the open-loop
@@ -571,6 +737,8 @@ def open_loop_run(
         "fault_tolerance": fault_tolerance,
         # v6: repro-lint pass + recompile contract over the open loop
         "static_analysis": static_analysis,
+        # v7: snapshot/warm-restart + preemption probe
+        "recovery": recovery,
         "artifacts": {
             "trace": trace_path.name,
             "metrics": metrics_path.name,
@@ -611,6 +779,14 @@ def open_loop_run(
         f"chaos_miss_rate={chaos['deadline_miss_rate']:.3f};"
         f"crashes={chaos['crashes']};"
         f"diagnosis={chaos['diagnosis']}",
+    )
+    emit(
+        "stream_bench/recovery", float(recovery["restore_us"]),
+        f"snapshot_us={recovery['snapshot_us']:.0f};"
+        f"preemptions={recovery['preemptions']};"
+        f"park_round_trip_us={recovery['preempt_round_trip_us']:.0f};"
+        f"resume_parity={recovery['resume_parity']};"
+        f"fallbacks={recovery['checkpoint_fallbacks']}",
     )
     return doc
 
@@ -919,6 +1095,71 @@ def validate(path: Path) -> List[str]:
         kv = sa.get("kernel_vmem_bytes")
         if not isinstance(kv, dict) or not kv:
             errors.append("static_analysis.kernel_vmem_bytes missing")
+
+    # v7: crash-safety evidence — warm-restart parity, checksum
+    # fallback, preemption round-trips
+    rec = doc.get("recovery", {})
+    if not isinstance(rec, dict) or not rec:
+        errors.append("recovery block missing")
+    else:
+        for k in ("snapshot_us", "restore_us"):
+            v = rec.get(k)
+            if not isinstance(v, (int, float)) or not v > 0:
+                errors.append(
+                    f"recovery.{k} not a positive number: {v!r}"
+                )
+        if not isinstance(rec.get("snapshots_written"), int) or (
+            rec.get("snapshots_written", 0) < 2
+        ):
+            errors.append(
+                f"recovery.snapshots_written "
+                f"{rec.get('snapshots_written')!r} < 2 — the rotation "
+                "path was not exercised"
+            )
+        if rec.get("resume_parity") is not True:
+            errors.append(
+                "recovery.resume_parity is not true — a warm-restarted "
+                "engine diverged from the uninterrupted oracle"
+            )
+        fb, inj = rec.get("checkpoint_fallbacks"), rec.get(
+            "injected_corruptions"
+        )
+        if fb != inj:
+            errors.append(
+                f"recovery.checkpoint_fallbacks {fb!r} != injected "
+                f"corruptions {inj!r} — a corrupt snapshot was either "
+                "missed by the checksum or double-counted"
+            )
+        pre = rec.get("preemptions")
+        if not isinstance(pre, int) or pre < 1:
+            errors.append(
+                f"recovery.preemptions {pre!r} < 1 — the urgent arrival "
+                "did not preempt a resident slot"
+            )
+        if not isinstance(rec.get("preempt_resumes"), int) or (
+            rec.get("preempt_resumes", 0) < 1
+        ):
+            errors.append(
+                f"recovery.preempt_resumes "
+                f"{rec.get('preempt_resumes')!r} < 1 — a parked window "
+                "was never restored"
+            )
+        if rec.get("preempt_parity") is not True:
+            errors.append(
+                "recovery.preempt_parity is not true — a parked/"
+                "restored window diverged from the oracle"
+            )
+        if isinstance(pre, int) and pre > 0:
+            for k in (
+                "preempt_park_us",
+                "preempt_restore_us",
+                "preempt_round_trip_us",
+            ):
+                v = rec.get(k)
+                if not isinstance(v, (int, float)) or not v > 0:
+                    errors.append(
+                        f"recovery.{k} not a positive number: {v!r}"
+                    )
 
     # sidecar artifacts exist and are structurally sound
     arts = doc.get("artifacts", {})

@@ -21,7 +21,10 @@ RL104    ``.at[...].set/add`` on a buffer that was donated to a
          jitted call earlier in the same block — the buffer may
          already be aliased/deleted.
 RL105    any other reuse of a donated buffer after the donating call
-         in the same block, without rebinding.
+         in the same block, without rebinding — including host reads
+         (``jax.device_get`` / ``jax.block_until_ready``) of donated
+         state, which a snapshot path must issue *before* the
+         donating dispatch.
 RL106    float64 in JAX code (``jnp.float64``, ``dtype="float64"``,
          ``jax_enable_x64``) — this repo is strictly f32/int; host
          ``np.float64`` bookkeeping is exempt.
@@ -583,6 +586,27 @@ class _Linter:
                         "buffer is aliased/deleted",
                     )
                     return
+        for node in ast.walk(stmt):
+            # snapshot path: a host read (device_get / block_until_ready)
+            # of a donated buffer reads freed storage — the snapshot must
+            # fetch state *before* the next tick's donating dispatch
+            if isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d in ("jax.device_get", "jax.block_until_ready"):
+                    for a in node.args:
+                        nm = _dotted(a)
+                        if nm in dead:
+                            self.emit(
+                                node,
+                                "RL105",
+                                f"host read `{d}({nm})` after `{nm}` was "
+                                "donated — snapshot/host fetches of donated "
+                                "state must happen before the donating "
+                                "dispatch, or rebind from the call's "
+                                "outputs",
+                            )
+                            dead.discard(nm)
+                            return
         for node in ast.walk(stmt):
             if id(node) in donated_here:
                 continue

@@ -1,3 +1,15 @@
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    gc_orphan_tmpdirs,
+    load_array_dir,
+    publish_array_dir,
+)
 
-__all__ = ["CheckpointManager"]
+__all__ = [
+    "CheckpointCorruptError",
+    "CheckpointManager",
+    "gc_orphan_tmpdirs",
+    "load_array_dir",
+    "publish_array_dir",
+]

@@ -1,19 +1,30 @@
 """Fault-tolerant checkpointing: atomic writes, keep-N, auto-resume,
-elastic (mesh-shape-independent) restore.
+elastic (mesh-shape-independent) restore, integrity verification.
 
 Design for the 1000+-node target:
   - checkpoints are written *atomically* (tmp dir + rename) so a node
     failure mid-save never corrupts the latest checkpoint;
+  - every array carries a crc32 checksum in the manifest — restore
+    detects truncated or bit-flipped checkpoints (disk corruption, torn
+    copies) and `restore_latest` falls back to the previous keep-N
+    checkpoint instead of loading garbage into a training run;
   - save gathers to host-replicated numpy (npz per pytree) — restore can
     therefore reshard onto ANY mesh (elastic scaling: train on 512 chips,
     resume on 256);
   - `latest_step()` + `restore_latest()` implement checkpoint/restart: the
     launcher always calls restore_latest and starts from step 0 only when
-    nothing is found (see launch/train.py);
+    nothing is found (see launch/train.py); both skip and garbage-collect
+    orphaned `.tmp_*` dirs left by a process killed mid-save;
   - background-thread save (`async_save=True`) overlaps serialization with
     the next step (double-buffered via a copied host tree), the standard
-    straggler/throughput mitigation for frequent checkpoints;
+    straggler/throughput mitigation for frequent checkpoints; `close()`
+    (or context-manager exit) joins the writer so interpreter teardown
+    cannot strand a partial tmp dir;
   - keep_n bounds disk usage.
+
+The atomic array-dir helpers (`publish_array_dir` / `load_array_dir`)
+are shared with the serving plane: `SNNStreamEngine.snapshot()` uses the
+same tmp-dir+rename+checksum discipline for warm-restart snapshots.
 
 On a real multi-host pod the gather maps to `multihost_utils.
 process_allgather` and only host 0 writes; in this single-host container
@@ -27,12 +38,111 @@ import os
 import shutil
 import tempfile
 import threading
-from typing import Any, Dict, Optional, Tuple
+import warnings
+import zipfile
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
+
+TMP_PREFIX = ".tmp_"
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint failed integrity verification (truncated npz,
+    checksum mismatch, missing arrays, unreadable manifest)."""
+
+
+def _crc32(arr: np.ndarray) -> int:
+    a = np.ascontiguousarray(arr)
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF
+
+
+def publish_array_dir(
+    directory: str,
+    name: str,
+    arrays: Dict[str, np.ndarray],
+    manifest: Dict,
+) -> str:
+    """Atomically write `arrays` + `manifest` as `directory/name`.
+
+    Writes arrays.npz and manifest.json (augmented with per-array crc32
+    checksums) into a `.tmp_*` dir, then publishes with a single rename
+    — a crash at any point leaves either the previous version or an
+    orphaned tmp dir, never a half-written published dir.
+    """
+    final = os.path.join(directory, name)
+    os.makedirs(directory, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=directory, prefix=TMP_PREFIX)
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        doc = dict(manifest)
+        doc["checksums"] = {k: _crc32(v) for k, v in arrays.items()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(doc, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_array_dir(path: str) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Load and checksum-verify an array dir written by
+    `publish_array_dir`. Raises CheckpointCorruptError on any integrity
+    failure; manifests without checksums (pre-v10 checkpoints) load
+    unverified for backward compatibility."""
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable manifest in {path}: {e}"
+        ) from e
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            arrays = {k: data[k] for k in data.files}
+    except (OSError, ValueError, zlib.error, EOFError,
+            zipfile.BadZipFile) as e:
+        raise CheckpointCorruptError(
+            f"unreadable/truncated arrays.npz in {path}: {e}"
+        ) from e
+    checksums = manifest.get("checksums")
+    if checksums is not None:
+        missing = set(checksums) - set(arrays)
+        if missing:
+            raise CheckpointCorruptError(
+                f"arrays missing from {path}: {sorted(missing)}"
+            )
+        for k, want in checksums.items():
+            got = _crc32(arrays[k])
+            if got != want:
+                raise CheckpointCorruptError(
+                    f"checksum mismatch for '{k}' in {path}: "
+                    f"manifest {want:#010x} != data {got:#010x}"
+                )
+    return arrays, manifest
+
+
+def gc_orphan_tmpdirs(directory: str) -> List[str]:
+    """Remove orphaned `.tmp_*` dirs left by a process killed mid-save.
+    Returns the paths removed. Caller must ensure no save is in flight
+    in this process (CheckpointManager guards this itself)."""
+    removed = []
+    if not os.path.isdir(directory):
+        return removed
+    for d in os.listdir(directory):
+        if d.startswith(TMP_PREFIX):
+            p = os.path.join(directory, d)
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(p)
+    return removed
 
 
 def _flatten_with_names(tree: PyTree):
@@ -55,7 +165,22 @@ class CheckpointManager:
         self.keep_n = keep_n
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self.fallbacks = 0  # corrupt checkpoints skipped by restore_latest
         os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------- lifecycle
+    def close(self):
+        """Join any in-flight async save. After close() the manager is
+        still usable; this only drains the writer so interpreter exit
+        cannot strand a partial `.tmp_*` dir."""
+        self.wait()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # ------------------------------------------------------------ save
     def save(self, step: int, tree: PyTree, metadata: Optional[Dict] = None):
@@ -72,24 +197,12 @@ class CheckpointManager:
             self._write(step, names, host_leaves, metadata)
 
     def _write(self, step, names, host_leaves, metadata):
-        final = os.path.join(self.directory, f"step_{step:010d}")
-        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
-        try:
-            np.savez(
-                os.path.join(tmp, "arrays.npz"),
-                **{f"a{i}": x for i, x in enumerate(host_leaves)},
-            )
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(
-                    {"step": step, "names": names, "metadata": metadata or {}},
-                    f,
-                )
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-        except BaseException:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
+        publish_array_dir(
+            self.directory,
+            f"step_{step:010d}",
+            {f"a{i}": x for i, x in enumerate(host_leaves)},
+            {"step": step, "names": names, "metadata": metadata or {}},
+        )
         self._gc()
 
     def wait(self):
@@ -105,6 +218,21 @@ class CheckpointManager:
                 ignore_errors=True,
             )
 
+    def _gc_orphans(self):
+        # only safe when this process has no writer mid-save; another
+        # manager instance's live tmp dir would be renamed away before
+        # we could race it in the workflows this repo runs (one writer
+        # per directory).
+        if self._thread is not None and self._thread.is_alive():
+            return
+        removed = gc_orphan_tmpdirs(self.directory)
+        for p in removed:
+            warnings.warn(
+                f"checkpoint: removed orphaned partial save {p} "
+                "(process killed mid-save?)",
+                stacklevel=3,
+            )
+
     # --------------------------------------------------------- restore
     def all_steps(self):
         out = []
@@ -118,6 +246,7 @@ class CheckpointManager:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        self._gc_orphans()
         steps = self.all_steps()
         return steps[-1] if steps else None
 
@@ -125,18 +254,23 @@ class CheckpointManager:
         self, step: int, like: PyTree, shardings: Optional[PyTree] = None
     ) -> PyTree:
         """Restore into the structure of `like`; optionally placed onto
-        `shardings` (elastic restore — any mesh shape)."""
+        `shardings` (elastic restore — any mesh shape). Raises
+        CheckpointCorruptError if the checkpoint fails checksum/read
+        verification, ValueError on a structure mismatch."""
         path = os.path.join(self.directory, f"step_{step:010d}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        data = np.load(os.path.join(path, "arrays.npz"))
+        data, manifest = load_array_dir(path)
         names, like_leaves, treedef = _flatten_with_names(like)
         if names != manifest["names"]:
             raise ValueError(
                 "checkpoint/model structure mismatch: "
                 f"{set(names) ^ set(manifest['names'])}"
             )
-        leaves = [data[f"a{i}"] for i in range(len(names))]
+        try:
+            leaves = [data[f"a{i}"] for i in range(len(names))]
+        except KeyError as e:
+            raise CheckpointCorruptError(
+                f"array {e} missing from {path}"
+            ) from e
         leaves = [
             np.asarray(x).astype(l.dtype) if hasattr(l, "dtype") else x
             for x, l in zip(leaves, like_leaves)
@@ -151,7 +285,20 @@ class CheckpointManager:
     def restore_latest(
         self, like: PyTree, shardings: Optional[PyTree] = None
     ) -> Tuple[Optional[int], Optional[PyTree]]:
-        step = self.latest_step()
-        if step is None:
-            return None, None
-        return step, self.restore(step, like, shardings)
+        """Restore the newest checkpoint that passes integrity
+        verification. A corrupt checkpoint is skipped with a loud
+        warning (`self.fallbacks` counts them) and the previous keep-N
+        checkpoint is tried — a byte-flipped latest save degrades the
+        recovery point instead of crashing the resume."""
+        self._gc_orphans()
+        for step in reversed(self.all_steps()):
+            try:
+                return step, self.restore(step, like, shardings)
+            except CheckpointCorruptError as e:
+                self.fallbacks += 1
+                warnings.warn(
+                    f"checkpoint step {step} failed integrity check "
+                    f"({e}); falling back to previous checkpoint",
+                    stacklevel=2,
+                )
+        return None, None

@@ -18,6 +18,7 @@ from repro.faults.inject import (  # noqa: F401
     FaultInjector,
     FaultSchedule,
     InjectedChunkError,
+    corrupt_checkpoint,
 )
 from repro.faults.shedding import (  # noqa: F401
     AdmissionPolicy,
@@ -42,4 +43,5 @@ __all__ = [
     "FaultInjector",
     "FaultSchedule",
     "InjectedChunkError",
+    "corrupt_checkpoint",
 ]

@@ -3,7 +3,7 @@
 Chaos testing needs *reproducible* chaos: a seeded
 :class:`FaultSchedule` is a plain list of :class:`Fault` records, and a
 :class:`FaultInjector` applies them against a live ``SNNStreamEngine``
-from inside its tick loop.  Four fault kinds cover the engine's real
+from inside its tick loop.  Six fault kinds cover the engine's real
 failure surfaces:
 
 ``nan_membrane``
@@ -25,6 +25,19 @@ failure surfaces:
 ``stall``
     Freezes the tick loop for ``ticks`` ticks (no dispatch, no
     retirement) — the wedge ``drain(timeout_s=...)`` must survive.
+``process_kill``
+    Delivers SIGKILL to the *current process* at the scheduled tick —
+    no atexit handlers, no flushes, exactly what a preempted node or an
+    OOM-killer does.  Only meaningful inside a chaos subprocess (the
+    kill-and-resume tests in ``tests/test_recovery.py``); the engine's
+    snapshot/restore and the checkpoint manager's atomic-write
+    discipline are what must survive it.
+``corrupt_checkpoint``
+    Flips bytes in the ``arrays.npz`` of the checkpoint/snapshot at
+    ``path`` (the newest ``step_*``/``snap_*`` dir when ``path`` is a
+    rotation directory), modelling disk corruption or a torn copy.  The
+    manifest checksums must detect it and ``restore_latest`` /
+    ``restore_latest_snapshot`` must fall back to the previous save.
 
 Application is governed by *injectability*: state/ring faults need a
 slot that is resident, mid-window, and past its admit tick (a freshly
@@ -42,6 +55,8 @@ quarantine log and measure recovery ticks.
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -55,9 +70,52 @@ __all__ = [
     "FaultInjector",
     "InjectedChunkError",
     "FAULT_KINDS",
+    "corrupt_checkpoint",
 ]
 
-FAULT_KINDS = ("nan_membrane", "corrupt_ring", "chunk_exception", "stall")
+FAULT_KINDS = (
+    "nan_membrane",
+    "corrupt_ring",
+    "chunk_exception",
+    "stall",
+    "process_kill",
+    "corrupt_checkpoint",
+)
+
+
+def corrupt_checkpoint(path: str, *, seed: int = 0, nbytes: int = 8) -> str:
+    """Deterministically flip ``nbytes`` bytes in the ``arrays.npz`` of
+    the checkpoint/snapshot at ``path``.
+
+    ``path`` may be the array dir itself or a rotation directory
+    containing ``step_*``/``snap_*`` subdirs (the newest is hit —
+    exactly the one ``restore_latest`` would try first, forcing the
+    fallback).  Returns the corrupted npz path.  The manifest is left
+    intact: detection must come from the checksum verification, not
+    from an unreadable manifest."""
+    target = path
+    if not os.path.exists(os.path.join(target, "arrays.npz")):
+        subs = sorted(
+            d for d in os.listdir(path)
+            if d.startswith(("step_", "snap_"))
+            and os.path.exists(os.path.join(path, d, "arrays.npz"))
+        )
+        if not subs:
+            raise FileNotFoundError(
+                f"no checkpoint arrays.npz under {path}"
+            )
+        target = os.path.join(path, subs[-1])
+    npz = os.path.join(target, "arrays.npz")
+    data = bytearray(open(npz, "rb").read())
+    rng = np.random.default_rng(seed)
+    # flip bytes in the back half: past the zip header/manifest region,
+    # inside some array's payload, so the crc32 check is what trips
+    lo = len(data) // 2
+    for off in rng.integers(lo, len(data), size=int(nbytes)):
+        data[int(off)] ^= 0xFF
+    with open(npz, "wb") as f:
+        f.write(bytes(data))
+    return npz
 
 
 class InjectedChunkError(RuntimeError):
@@ -74,6 +132,8 @@ class Fault:
     poisons; ``ticks`` how long a ``stall`` lasts; ``only_backend``
     restricts a ``chunk_exception`` to dispatches on that backend
     (``"fused"`` faults vanish after demotion — the failover scenario).
+    ``path`` is the checkpoint/snapshot directory a
+    ``corrupt_checkpoint`` fault flips bytes in.
     """
 
     tick: int
@@ -83,6 +143,7 @@ class Fault:
     times: int = 1
     ticks: int = 1
     only_backend: Optional[str] = None
+    path: Optional[str] = None
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -197,6 +258,22 @@ class FaultInjector:
                 })
             elif f.kind == "stall":
                 self._stall_until = max(self._stall_until, tick + f.ticks)
+            elif f.kind == "process_kill":
+                # record first (moot for us — the process is gone — but
+                # a shared applied-log file would see it), then die the
+                # way a preempted node dies: no atexit, no flushes
+                self.applied.append(rec)
+                os.kill(os.getpid(), signal.SIGKILL)
+            elif f.kind == "corrupt_checkpoint":
+                if f.path is None:
+                    raise ValueError(
+                        "corrupt_checkpoint fault needs path="
+                    )
+                try:
+                    rec["path"] = corrupt_checkpoint(f.path)
+                except FileNotFoundError:
+                    still_pending.append(f)  # no save yet: carry forward
+                    continue
             else:
                 s = self._pick_slot(engine, f.slot)
                 if s is None:

@@ -11,8 +11,18 @@ async admission with open-loop Poisson arrivals, deadlines, priorities):
       [--arrival-rate 20] [--deadline-ms 500] \
       [--max-queue 8] [--shed] [--drain-timeout 60] \
       [--inject-faults 4 --fault-seed 0] \
+      [--snapshot-dir /tmp/snn-snap --snapshot-every 5 --restore] \
+      [--preempt] \
       [--metrics-json metrics.json] [--trace-out trace.json] \
       [--profile-ticks 20 --profile-dir /tmp/snn-profile]
+
+Crash safety (with --snn): ``--snapshot-dir D --snapshot-every S``
+writes a rotating atomic engine snapshot every S seconds (resident
+membranes, AER rings, queue, parked + preempt-parked requests);
+``--restore`` warm-restarts from the latest intact one — in-flight
+windows resume mid-window, bit-exactly, and checksum-corrupt snapshots
+fall back to the previous save.  ``--preempt`` enables deadline-aware
+slot preemption (see ``SNNStreamEngine(preempt=True)``).
 
 Fault tolerance (with --snn): ``--max-queue N`` bounds the admission
 queue (overflow sheds priority-0 requests, parks higher priorities) and
@@ -136,7 +146,30 @@ def _serve_snn(args) -> None:
         pipeline_depth=0 if args.no_pipeline else 1,
         slos=default_slos(p99_target_s=deadline_s or 1.0),
         admission=admission, injector=injector,
+        preempt=args.preempt,
     )
+
+    # crash safety: warm-restart from the latest intact snapshot under
+    # --snapshot-dir (corrupt/partial ones are skipped with a warning),
+    # then keep snapshotting on the --snapshot-every cadence below
+    if args.restore:
+        if not args.snapshot_dir:
+            raise SystemExit("--restore requires --snapshot-dir")
+        restored = engine.restore_latest_snapshot(args.snapshot_dir)
+        if restored is not None:
+            print(f"snn: warm-restarted from {restored} "
+                  f"(resident slots resume mid-window)")
+        else:
+            print(f"snn: no usable snapshot under {args.snapshot_dir}; "
+                  f"cold start")
+    snap_state = {"t": time.perf_counter()}
+
+    def _maybe_snapshot():
+        if not args.snapshot_dir or args.snapshot_every <= 0:
+            return
+        if time.perf_counter() - snap_state["t"] >= args.snapshot_every:
+            engine.snapshot_auto(args.snapshot_dir)
+            snap_state["t"] = time.perf_counter()
 
     key = jax.random.PRNGKey(2)
     reqs = []
@@ -194,7 +227,22 @@ def _serve_snn(args) -> None:
                 )
                 continue
             results.extend(engine.poll())
+            _maybe_snapshot()
         results.sort(key=lambda r: r.request_id)
+    elif args.snapshot_dir and args.snapshot_every > 0:
+        # closed-loop with a live snapshot cadence: poll manually so the
+        # engine can checkpoint between ticks (drain() would block)
+        for r in reqs:
+            engine.submit(r)
+        results, t_start = [], time.perf_counter()
+        while not engine.idle():
+            if (args.drain_timeout > 0
+                    and time.perf_counter() - t_start > args.drain_timeout):
+                print(f"snn: STALLED after {args.drain_timeout:.1f}s — "
+                      f"stuck slots: {engine.stall_snapshot()['slots']}")
+                break
+            results.extend(engine.poll())
+            _maybe_snapshot()
     elif args.drain_timeout > 0:
         # bounded closed-loop drain: a wedged tick loop surfaces as the
         # per-slot stuck diagnostic instead of hanging the launcher
@@ -390,6 +438,22 @@ def main(argv=None):
                          "exceptions) during the run")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for --inject-faults schedules")
+    # crash safety / preemption (with --snn)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="directory for rotating engine snapshots "
+                         "(atomic snap_* dirs, keep-3)")
+    ap.add_argument("--snapshot-every", type=float, default=0.0,
+                    help="snapshot cadence in seconds during the serve "
+                         "loop (0 = never; requires --snapshot-dir)")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm-restart from the latest intact snapshot "
+                         "under --snapshot-dir before serving (corrupt "
+                         "snapshots are skipped with a fallback)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="deadline-aware slot preemption: a tighter-"
+                         "deadline arrival with no free slot parks the "
+                         "loosest resident window and resumes it later, "
+                         "bit-exactly")
     # observability (with --snn)
     ap.add_argument("--metrics-json", default=None,
                     help="write the engine's metrics-registry snapshot "

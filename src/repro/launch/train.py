@@ -96,9 +96,13 @@ def _train_snn_events(args) -> None:
 
     mesh = make_host_mesh()
     with mesh:
+        # fast-forward the data stream to the restored step so a resumed
+        # run sees bit-identical batches to an uninterrupted one
         state, metrics = trainer.run(
             state,
-            ev_trainer.dvs_batches(args.seed, args.batch, tcfg),
+            ev_trainer.dvs_batches(
+                args.seed, args.batch, tcfg, start_step=int(state.step)
+            ),
             args.steps,
         )
     print("final:", metrics)

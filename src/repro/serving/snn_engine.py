@@ -101,6 +101,33 @@ avoidance — is a latency-critical, always-on workload, so the engine is an
   "overloaded and shedding correctly" from "faulty".  A seeded
   ``faults.FaultInjector`` (``injector=``) drives the chaos suite in
   ``tests/test_faults.py`` and the bench's ``fault_tolerance`` block.
+- **Crash-safe state.** ``snapshot(path)`` serializes the engine's
+  *complete* serving state — per-slot membrane/refractory rows, packed
+  AER rings, on-device scheduling metadata, host bookkeeping, the
+  admission queue, parked requests, the preemption parking buffer, and
+  undelivered results — through the checkpoint plane's atomic
+  tmp-dir+rename+checksum discipline.  ``restore(path)`` on a freshly
+  built engine (same params/config) resumes every in-flight window
+  **bit-exactly**: float32 membranes and int8/int16 event tables round-
+  trip through npz unchanged, so a warm-restarted engine's results are
+  bit-identical to an uninterrupted run (``tests/test_recovery.py``).
+  ``snapshot_auto``/``restore_latest_snapshot`` add a keep-N rotation
+  with corrupt-snapshot fallback (checksum failure -> loud warning +
+  ``engine.faults.checkpoint_fallback`` counter, previous snapshot
+  restored).  Absolute wall-clock state (deadlines, submit times) is
+  persisted as remaining-budget/ages and re-anchored at restore —
+  ``perf_counter`` values are meaningless across processes.
+- **Deadline-aware preemption** (``preempt=True``).  When a strictly
+  tighter-urgency request arrives with every slot busy, the loosest
+  resident window is *parked* — state rows, staged ring row, and
+  accumulators move to a host-side parking buffer — the urgent window
+  runs, and the parked window resumes from the exact step it stopped
+  at (admit flag stays 0, so the chunk does not zero the restored
+  membranes; mid-window park/restore is bit-exact).  Parking costs one
+  D2H + one H2D of a single slot's rows, measured per event in
+  ``engine.preempt.park_s`` / ``restore_s`` histograms and the
+  ``engine.preempt.parked_events`` counter; ``health()`` flags
+  ``preempt_thrash`` when the park rate outruns completions.
 """
 
 from __future__ import annotations
@@ -108,7 +135,10 @@ from __future__ import annotations
 import collections
 import dataclasses
 import heapq
+import os
+import shutil
 import time
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -116,6 +146,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.checkpoint.manager import (
+    CheckpointCorruptError,
+    gc_orphan_tmpdirs,
+    load_array_dir,
+    publish_array_dir,
+)
 from repro.core import coding, energy, neuron, snn
 from repro.distributed import partitioning
 from repro.events import aer, runtime
@@ -206,6 +242,48 @@ class StreamResult:
     parked: bool = False
 
 
+def _doc_result(r: StreamResult) -> Dict:
+    """JSON-able form of a StreamResult (snapshot manifest); the small
+    per-class arrays ride in the manifest as lists."""
+    return {
+        "request_id": r.request_id,
+        "prediction": r.prediction,
+        "spike_counts": [float(x) for x in np.ravel(r.spike_counts)],
+        "steps": r.steps,
+        "latency_s": r.latency_s,
+        "queue_wait_s": r.queue_wait_s,
+        "events_per_layer": [
+            float(x) for x in np.ravel(r.events_per_layer)
+        ],
+        "spike_rate": r.spike_rate,
+        "energy_pj": r.energy_pj,
+        "deadline_s": r.deadline_s,
+        "deadline_missed": bool(r.deadline_missed),
+        "disposition": r.disposition,
+        "fault": r.fault,
+        "parked": bool(r.parked),
+    }
+
+
+def _undoc_result(d: Dict) -> StreamResult:
+    return StreamResult(
+        request_id=d["request_id"],
+        prediction=d["prediction"],
+        spike_counts=np.asarray(d["spike_counts"], np.float64),
+        steps=d["steps"],
+        latency_s=d["latency_s"],
+        queue_wait_s=d["queue_wait_s"],
+        events_per_layer=np.asarray(d["events_per_layer"], np.float64),
+        spike_rate=d["spike_rate"],
+        energy_pj=d["energy_pj"],
+        deadline_s=d["deadline_s"],
+        deadline_missed=d["deadline_missed"],
+        disposition=d["disposition"],
+        fault=d["fault"],
+        parked=d["parked"],
+    )
+
+
 class SNNStreamEngine:
     """Async-admission, deadline-aware scheduler over device-resident
     event rings and the event-driven SNN chunk runtime."""
@@ -229,6 +307,7 @@ class SNNStreamEngine:
         fault_checks: bool = True,
         injector=None,
         retry: Optional[RetryPolicy] = None,
+        preempt: bool = False,
     ):
         self.params = params
         self.cfg = cfg
@@ -256,6 +335,10 @@ class SNNStreamEngine:
         self.admission = admission
         self.fault_checks = bool(fault_checks)
         self.injector = injector
+        # deadline-aware slot preemption (opt-in): a strictly tighter-
+        # urgency arrival may park the loosest resident window
+        self.preempt = bool(preempt)
+        self._snap_index = 0  # snapshot_auto rotation counter
         self._backend_active = backend
         self._supervisor = ChunkSupervisor(
             retry or RetryPolicy(),
@@ -598,6 +681,29 @@ class SNNStreamEngine:
         self._m_q_events = m.counter("engine.episode.quarantined_events")
         self._m_q_steps = m.counter("engine.episode.quarantined_steps")
         self._m_parked_depth = m.gauge("engine.queue.parked")
+        # crash-safety + preemption plane: snapshot/restore timing, the
+        # corrupt-checkpoint fallback counter restore_latest_snapshot()
+        # bumps, and parking-buffer traffic (park/restore cost per slot
+        # in the histograms; parked_events gives the per-event divisor)
+        self._m_snap_time = m.histogram(
+            "engine.snapshot.save_s", lo=1e-6, hi=100.0
+        )
+        self._m_restore_snap_time = m.histogram(
+            "engine.snapshot.restore_s", lo=1e-6, hi=100.0
+        )
+        self._m_ckpt_fallback = m.counter(
+            "engine.faults.checkpoint_fallback"
+        )
+        self._m_preempt_parked = m.counter("engine.preempt.parked")
+        self._m_preempt_resumed = m.counter("engine.preempt.resumed")
+        self._m_preempt_events = m.counter("engine.preempt.parked_events")
+        self._m_preempt_depth = m.gauge("engine.preempt.buffer_depth")
+        self._m_park_time = m.histogram(
+            "engine.preempt.park_s", lo=1e-7, hi=10.0
+        )
+        self._m_restore_time = m.histogram(
+            "engine.preempt.restore_s", lo=1e-7, hi=10.0
+        )
         # SLO verdict gauge (0 healthy / 1 degraded / 2 breach), written
         # by health(); readable in any snapshot without re-evaluating
         self._m_health = m.gauge("engine.slo.status")
@@ -683,6 +789,19 @@ class SNNStreamEngine:
                 f"({recompiles}) — a dispatch path is shape-unstable "
                 "(every compile stalls serving for the full trace+compile)"
             )
+        # preemption thrash: windows are being swapped in and out faster
+        # than any of them completes — the engine is busy moving state,
+        # not integrating spikes
+        park_rate = self.timeseries.rate("engine.preempt.parked", 10.0)
+        done_rate = self.timeseries.rate("engine.requests.completed", 10.0)
+        thrash = park_rate > 0.0 and park_rate > done_rate
+        if thrash:
+            hint += (
+                "; preempt_thrash: park/restore rate exceeds the "
+                "completion rate — preemption is swapping slot state "
+                "faster than windows finish (add slots, damp priority "
+                "spread, or loosen deadlines)"
+            )
         return {
             "verdict": verdict,
             "hint": hint,
@@ -691,6 +810,9 @@ class SNNStreamEngine:
             "shed_total": shed,
             "windowed_shed_rate": window,
             "parked_depth": len(self._parked),
+            "preempt_thrash": thrash,
+            "preempt_parked_depth": len(self._preempt_parked),
+            "preempt_park_rate": park_rate,
             "quarantined_total": quarantined,
             "backend_demotions": demoted,
             "chunk_retries": retries,
@@ -727,6 +849,7 @@ class SNNStreamEngine:
         self._slot_admit_t = np.zeros(S, np.float64)
         self._slot_deadline: List[Optional[float]] = [None] * S  # absolute
         self._slot_rel_deadline: List[Optional[float]] = [None] * S
+        self._slot_priority = np.zeros(S, np.int64)
         self._slot_counts = np.zeros((S, cfg.layer_sizes[-1]), np.float64)
         self._slot_memsum = np.zeros((S, cfg.layer_sizes[-1]), np.float64)
         self._slot_events = np.zeros((S, cfg.num_layers), np.float64)
@@ -740,6 +863,10 @@ class SNNStreamEngine:
         # bench's recovery-ticks metric), and the tick index the log and
         # injector schedules are expressed in
         self._parked: "collections.deque[tuple]" = collections.deque()
+        # preemption parking buffer: host-side records of displaced
+        # mid-window slots (state rows + ring row + accumulators),
+        # resumed by _fill_slot in urgency order
+        self._preempt_parked: List[Dict] = []
         self._pending_results: List[StreamResult] = []
         self.fault_events: List[Dict] = []
         self._tick_index = 0
@@ -933,6 +1060,7 @@ class SNNStreamEngine:
         self._m_qwait.record(self._slot_admit_t[s] - t_submit)
         self._slot_deadline[s] = abs_deadline
         self._slot_rel_deadline[s] = req.deadline_s
+        self._slot_priority[s] = int(req.priority)
         self._slot_counts[s] = 0.0
         self._slot_memsum[s] = 0.0
         self._slot_events[s] = 0.0
@@ -1292,13 +1420,576 @@ class SNNStreamEngine:
         self._slot_parked[s] = False
         return res
 
+    # -------------------------------------------------------- preemption
+    def _drain_inflight(self) -> None:
+        """Retire every pipelined chunk's stats, finalizing any
+        requests they complete into the pending-results buffer — the
+        consistency point snapshot() and preemption parking require:
+        afterwards ``_slot_retired == _slot_done`` for every resident
+        slot, so parked/persisted host accumulators match the device
+        state exactly."""
+        while self._inflight:
+            for s in self._retire():
+                self._pending_results.append(self._finalize(s))
+
+    def _slot_key(self, s: int):
+        """Urgency key of slot ``s``'s resident request — comparable
+        with the admission heap's key prefix (priority desc,
+        deadline-less last, EDF)."""
+        dl = self._slot_deadline[s]
+        return (
+            -int(self._slot_priority[s]),
+            0 if dl is not None else 1,
+            dl if dl is not None else 0.0,
+        )
+
+    def _best_preempt_key(self) -> Optional[Tuple]:
+        """(key, index) of the most urgent preempt-parked window, or
+        None when the parking buffer is empty."""
+        best = None
+        for i, rec in enumerate(self._preempt_parked):
+            dl = rec["abs_deadline"]
+            k = (
+                -int(rec["priority"]),
+                0 if dl is not None else 1,
+                dl if dl is not None else 0.0,
+            )
+            if best is None or k < best[0]:
+                best = (k, i)
+        return best
+
+    def _victim(self, head_key) -> Optional[int]:
+        """The loosest-urgency resident slot *strictly* looser than
+        ``head_key``, or None — an equal-urgency arrival never
+        displaces a running window (ties would swap-thrash)."""
+        worst, worst_key = None, None
+        for s in range(self.S):
+            if self._slot_req[s] is None:
+                continue
+            k = self._slot_key(s)
+            if worst_key is None or k > worst_key:
+                worst, worst_key = s, k
+        if worst is None or not (head_key < worst_key):
+            return None
+        return worst
+
+    def _maybe_preempt(self) -> None:
+        """Park the loosest resident window when the queue head is
+        strictly more urgent and no slot is free (``preempt=True``
+        only).  At most one park per poll round — the freed slot is
+        filled with the urgent request in the same round."""
+        if not self.preempt or not self._queue:
+            return
+        if any(r is None for r in self._slot_req):
+            return  # a free slot serves the arrival without displacement
+        head_key = self._queue[0][0][:3]
+        if self._victim(head_key) is None:
+            return
+        # retire pipelined stats before parking: retirement may complete
+        # a slot outright (cheaper than a park/restore round trip), and
+        # parking requires retired == done — a parked slot with a chunk
+        # still in flight would silently drop that chunk's stats at
+        # _retire()'s slot-reuse guard
+        self._drain_inflight()
+        if any(r is None for r in self._slot_req):
+            return
+        v = self._victim(head_key)
+        if v is not None:
+            self._park_slot(v)
+
+    def _park_slot(self, s: int) -> None:
+        """Preempt slot ``s``: move its membrane/refractory rows,
+        staged ring row, scheduling metadata, and host accumulators
+        into the parking buffer and free the slot.  Inverse of
+        ``_resume_slot``; the round trip is bit-exact (float32/int8
+        rows survive device_get/device_put unchanged).  Caller must
+        have drained the stats pipeline first."""
+        t0 = time.perf_counter()
+        rid = self._slot_req[s]
+        rec = {
+            "rid": rid,
+            "priority": int(self._slot_priority[s]),
+            "done": int(self._slot_retired[s]),
+            "total": int(self._slot_total[s]),
+            "parked": bool(self._slot_parked[s]),
+            "ring_steps": self._ring_steps,
+            "rel_deadline": self._slot_rel_deadline[s],
+            "abs_deadline": self._slot_deadline[s],
+            "t_submit": float(self._slot_submit_t[s]),
+            "t_admit": float(self._slot_admit_t[s]),
+            "u": [
+                np.asarray(jax.device_get(st.u[s])) for st in self._states
+            ],
+            "refrac": [
+                np.asarray(jax.device_get(st.refrac[s]))
+                for st in self._states
+            ],
+            "ring_addrs": np.asarray(
+                jax.device_get(self._ring["addrs"][s])
+            ),
+            "ring_values": np.asarray(
+                jax.device_get(self._ring["values"][s])
+            ),
+            "ring_counts": np.asarray(
+                jax.device_get(self._ring["counts"][s])
+            ),
+            "counts": self._slot_counts[s].copy(),
+            "memsum": self._slot_memsum[s].copy(),
+            "events": self._slot_events[s].copy(),
+        }
+        self._preempt_parked.append(rec)
+        # free the slot: total=0 makes the next chunk take nothing from
+        # it; the stale device state is dead weight until overwritten
+        self._meta = {
+            "done": self._meta["done"].at[s].set(0),
+            "total": self._meta["total"].at[s].set(0),
+            "admit": self._meta["admit"].at[s].set(0),
+            "fault": self._meta["fault"].at[s].set(0),
+        }
+        self._slot_req[s] = None
+        self._slot_parked[s] = False
+        t1 = time.perf_counter()
+        self._m_preempt_parked.inc()
+        self._m_preempt_events.inc(float(rec["events"].sum()))
+        self._m_park_time.record(t1 - t0)
+        self._m_preempt_depth.set(len(self._preempt_parked))
+        self.trace.span(
+            "park", t0, t1, track=f"slot{s}",
+            args={"rid": rid, "done": rec["done"], "total": rec["total"]},
+        )
+
+    def _resume_slot(self, s: int, rec: Dict) -> None:
+        """Admit a preempt-parked window into free slot ``s``,
+        restoring its state/ring rows device-side.  The admit flag
+        stays 0 — unlike fresh admission, the chunk must NOT zero the
+        restored membranes — so the window continues from exactly the
+        step it was parked at."""
+        t0 = time.perf_counter()
+        if rec["ring_steps"] > self._ring_steps:
+            # the ring shrank relative to the record only across a
+            # restore onto a smaller-ring engine; grow back so the
+            # stored row fits (one allowlisted recompile)
+            self._grow_ring(rec["ring_steps"])
+        r = rec["ring_addrs"].shape[0]
+        self._states = [
+            neuron.NeuronState(
+                u=st.u.at[s].set(jax.device_put(rec["u"][i])),
+                refrac=st.refrac.at[s].set(
+                    jax.device_put(rec["refrac"][i])
+                ),
+            )
+            for i, st in enumerate(self._states)
+        ]
+        self._ring = {
+            "addrs": self._ring["addrs"].at[s, :r].set(
+                jax.device_put(rec["ring_addrs"])
+            ),
+            "values": self._ring["values"].at[s, :r].set(
+                jax.device_put(rec["ring_values"])
+            ),
+            "counts": self._ring["counts"].at[s, :r].set(
+                jax.device_put(rec["ring_counts"])
+            ),
+        }
+        self._meta = {
+            "done": self._meta["done"].at[s].set(rec["done"]),
+            "total": self._meta["total"].at[s].set(rec["total"]),
+            "admit": self._meta["admit"].at[s].set(0),
+            "fault": self._meta["fault"].at[s].set(0),
+        }
+        self._slot_req[s] = rec["rid"]
+        self._slot_parked[s] = rec["parked"]
+        self._slot_priority[s] = rec["priority"]
+        self._slot_done[s] = rec["done"]
+        self._slot_retired[s] = rec["done"]
+        self._slot_total[s] = rec["total"]
+        self._slot_submit_t[s] = rec["t_submit"]
+        self._slot_admit_t[s] = rec["t_admit"]
+        self._slot_deadline[s] = rec["abs_deadline"]
+        self._slot_rel_deadline[s] = rec["rel_deadline"]
+        self._slot_counts[s] = rec["counts"]
+        self._slot_memsum[s] = rec["memsum"]
+        self._slot_events[s] = rec["events"]
+        t1 = time.perf_counter()
+        self._m_preempt_resumed.inc()
+        self._m_restore_time.record(t1 - t0)
+        self._m_preempt_depth.set(len(self._preempt_parked))
+        self.trace.span(
+            "resume", t0, t1, track=f"slot{s}",
+            args={
+                "rid": rec["rid"],
+                "done": rec["done"],
+                "total": rec["total"],
+            },
+        )
+
+    # --------------------------------------------------- crash-safe state
+    def snapshot(self, path: str) -> str:
+        """Serialize the engine's complete serving state into the
+        directory ``path``: per-slot membrane/refractory states, packed
+        AER rings, on-device scheduling metadata, host bookkeeping, the
+        admission queue, parked requests, the preemption parking
+        buffer, undelivered results, the PRNG key, and the fault-event
+        log.  Atomic (tmp-dir + rename + per-array crc32 checksums via
+        the checkpoint plane) — a crash mid-snapshot leaves the
+        previous snapshot intact.
+
+        Wall-clock state is persisted as remaining deadline budgets and
+        ages: absolute ``perf_counter`` values are meaningless in
+        another process, so :meth:`restore` re-anchors them.  Restoring
+        on a freshly built engine (identical params/config) finishes
+        every in-flight window bit-exactly."""
+        t0 = time.perf_counter()
+        # consistency point: retire all pipelined stats (finalizing any
+        # windows they complete) so host accumulators match device state
+        self._drain_inflight()
+        now = time.perf_counter()
+        arrays: Dict[str, np.ndarray] = {}
+        for i, st in enumerate(self._states):
+            arrays[f"state{i}_u"] = np.asarray(jax.device_get(st.u))
+            arrays[f"state{i}_refrac"] = np.asarray(
+                jax.device_get(st.refrac)
+            )
+        for k, v in self._ring.items():
+            arrays[f"ring_{k}"] = np.asarray(jax.device_get(v))
+        for k, v in self._meta.items():
+            arrays[f"meta_{k}"] = np.asarray(jax.device_get(v))
+        arrays["rng_key"] = np.asarray(jax.device_get(self._rng))
+        for name in ("done", "retired", "total", "priority"):
+            arrays[f"slot_{name}"] = getattr(self, f"_slot_{name}").copy()
+        arrays["slot_counts"] = self._slot_counts.copy()
+        arrays["slot_memsum"] = self._slot_memsum.copy()
+        arrays["slot_events"] = self._slot_events.copy()
+        slots = []
+        for s in range(self.S):
+            dl = self._slot_deadline[s]
+            slots.append({
+                "rid": self._slot_req[s],
+                "parked": bool(self._slot_parked[s]),
+                "rel_deadline": self._slot_rel_deadline[s],
+                "deadline_remaining_s": (
+                    None if dl is None else dl - now
+                ),
+                "submit_age_s": now - float(self._slot_submit_t[s]),
+                "admit_age_s": now - float(self._slot_admit_t[s]),
+            })
+
+        def pack_req(prefix, rid, req, t_sub, dl, extra=None):
+            if req.spikes is not None:
+                arrays[f"{prefix}_spikes"] = np.asarray(req.spikes)
+            else:
+                arrays[f"{prefix}_image"] = np.asarray(req.image)
+            doc = {
+                "rid": rid,
+                "priority": int(req.priority),
+                "num_steps": req.num_steps,
+                "deadline_s": req.deadline_s,
+                "submit_age_s": now - t_sub,
+                "deadline_remaining_s": (
+                    None if dl is None else dl - now
+                ),
+            }
+            doc.update(extra or {})
+            return doc
+
+        queue_docs = [
+            pack_req(f"q{i}", rid, req, t_sub, dl, {"seq": key[3]})
+            for i, (key, rid, req, t_sub, dl)
+            in enumerate(sorted(self._queue))
+        ]
+        parked_docs = [
+            pack_req(f"p{i}", rid, req, t_sub, dl)
+            for i, (rid, req, t_sub, dl) in enumerate(self._parked)
+        ]
+        pp_docs = []
+        for i, rec in enumerate(self._preempt_parked):
+            for layer in range(len(rec["u"])):
+                arrays[f"pp{i}_u{layer}"] = rec["u"][layer]
+                arrays[f"pp{i}_refrac{layer}"] = rec["refrac"][layer]
+            for k in ("ring_addrs", "ring_values", "ring_counts",
+                      "counts", "memsum", "events"):
+                arrays[f"pp{i}_{k}"] = rec[k]
+            dl = rec["abs_deadline"]
+            pp_docs.append({
+                "rid": rec["rid"],
+                "priority": rec["priority"],
+                "done": rec["done"],
+                "total": rec["total"],
+                "parked": rec["parked"],
+                "ring_steps": rec["ring_steps"],
+                "rel_deadline": rec["rel_deadline"],
+                "deadline_remaining_s": (
+                    None if dl is None else dl - now
+                ),
+                "submit_age_s": now - rec["t_submit"],
+                "admit_age_s": now - rec["t_admit"],
+            })
+        manifest = {
+            "kind": "snn_engine_snapshot",
+            "geometry": {
+                "num_slots": self.S,
+                "chunk_steps": self.Tc,
+                "event_capacity": self.C,
+                "ring_steps": self._ring_steps,
+                "layer_sizes": list(self.cfg.layer_sizes),
+            },
+            "backend": self._backend_active,
+            "tick_index": self._tick_index,
+            "seq": self._seq,
+            "next_rid": self._next_rid,
+            "snap_index": self._snap_index,
+            "episode_open": self._episode_open,
+            "episode_age_s": (
+                now - self._episode_t0 if self._episode_open else 0.0
+            ),
+            "slots": slots,
+            "queue": queue_docs,
+            "parked": parked_docs,
+            "preempt_parked": pp_docs,
+            "pending_results": [
+                _doc_result(r) for r in self._pending_results
+            ],
+            "fault_events": list(self.fault_events),
+        }
+        path = os.path.normpath(path)
+        out = publish_array_dir(
+            os.path.dirname(path) or ".",
+            os.path.basename(path),
+            arrays,
+            manifest,
+        )
+        t1 = time.perf_counter()
+        self._m_snap_time.record(t1 - t0)
+        self.trace.span(
+            "snapshot", t0, t1, track="engine", args={"path": out}
+        )
+        return out
+
+    def restore(self, path: str) -> None:
+        """Load a snapshot written by :meth:`snapshot` into this engine
+        (freshly constructed with the same params/config).  Raises
+        :class:`~repro.checkpoint.CheckpointCorruptError` when the
+        snapshot fails checksum/read verification, ValueError on a
+        geometry mismatch (different slots/chunk/capacity/layers —
+        snapshots are elastic across *mesh* shape, not model shape)."""
+        t_start = time.perf_counter()
+        path = os.path.normpath(path)
+        arrays, manifest = load_array_dir(path)
+        if manifest.get("kind") != "snn_engine_snapshot":
+            raise ValueError(f"{path} is not an engine snapshot")
+        g = manifest["geometry"]
+        want = {
+            "num_slots": self.S,
+            "chunk_steps": self.Tc,
+            "event_capacity": self.C,
+            "layer_sizes": list(self.cfg.layer_sizes),
+        }
+        got = {k: g.get(k) for k in want}
+        if got != want:
+            raise ValueError(
+                f"snapshot geometry mismatch: snapshot {got} != "
+                f"engine {want}"
+            )
+        self._reset_all()
+        if int(g["ring_steps"]) != self._ring_steps:
+            self._ring_steps = int(g["ring_steps"])
+            # a different ring shape is a fresh compile site for this
+            # engine's chunk — allowlist it
+            self._chunk_compiles_expected += 1
+        now = time.perf_counter()
+        try:
+            self._states = [
+                neuron.NeuronState(
+                    u=jax.device_put(arrays[f"state{i}_u"]),
+                    refrac=jax.device_put(arrays[f"state{i}_refrac"]),
+                )
+                for i in range(len(self._states))
+            ]
+            self._ring = {
+                k: jax.device_put(arrays[f"ring_{k}"])
+                for k in ("addrs", "values", "counts")
+            }
+            self._meta = {
+                k: jax.device_put(arrays[f"meta_{k}"])
+                for k in ("done", "total", "admit", "fault")
+            }
+            self._rng = jax.device_put(arrays["rng_key"])
+            self._slot_done = arrays["slot_done"].astype(np.int64)
+            self._slot_retired = arrays["slot_retired"].astype(np.int64)
+            self._slot_total = arrays["slot_total"].astype(np.int64)
+            self._slot_priority = arrays["slot_priority"].astype(
+                np.int64
+            )
+            self._slot_counts = arrays["slot_counts"].astype(np.float64)
+            self._slot_memsum = arrays["slot_memsum"].astype(np.float64)
+            self._slot_events = arrays["slot_events"].astype(np.float64)
+            for s, doc in enumerate(manifest["slots"]):
+                self._slot_req[s] = doc["rid"]
+                self._slot_parked[s] = bool(doc["parked"])
+                self._slot_rel_deadline[s] = doc["rel_deadline"]
+                rem = doc["deadline_remaining_s"]
+                self._slot_deadline[s] = (
+                    None if rem is None else now + rem
+                )
+                self._slot_submit_t[s] = now - doc["submit_age_s"]
+                self._slot_admit_t[s] = now - doc["admit_age_s"]
+
+            def unpack_req(prefix, doc):
+                kw = dict(
+                    num_steps=doc["num_steps"],
+                    deadline_s=doc["deadline_s"],
+                    priority=doc["priority"],
+                )
+                if f"{prefix}_spikes" in arrays:
+                    req = StreamRequest(
+                        spikes=arrays[f"{prefix}_spikes"], **kw
+                    )
+                else:
+                    req = StreamRequest(
+                        image=arrays[f"{prefix}_image"], **kw
+                    )
+                rem = doc["deadline_remaining_s"]
+                dl = None if rem is None else now + rem
+                return req, now - doc["submit_age_s"], dl
+
+            self._queue = []
+            for i, doc in enumerate(manifest["queue"]):
+                req, t_sub, dl = unpack_req(f"q{i}", doc)
+                key = (
+                    -int(req.priority),
+                    0 if dl is not None else 1,
+                    dl if dl is not None else 0.0,
+                    doc["seq"],
+                )
+                heapq.heappush(
+                    self._queue, (key, doc["rid"], req, t_sub, dl)
+                )
+            self._parked = collections.deque()
+            for i, doc in enumerate(manifest["parked"]):
+                req, t_sub, dl = unpack_req(f"p{i}", doc)
+                self._parked.append((doc["rid"], req, t_sub, dl))
+            self._preempt_parked = []
+            n_layers = len(self._states)
+            for i, doc in enumerate(manifest["preempt_parked"]):
+                rem = doc["deadline_remaining_s"]
+                self._preempt_parked.append({
+                    "rid": doc["rid"],
+                    "priority": int(doc["priority"]),
+                    "done": int(doc["done"]),
+                    "total": int(doc["total"]),
+                    "parked": bool(doc["parked"]),
+                    "ring_steps": int(doc["ring_steps"]),
+                    "rel_deadline": doc["rel_deadline"],
+                    "abs_deadline": (
+                        None if rem is None else now + rem
+                    ),
+                    "t_submit": now - doc["submit_age_s"],
+                    "t_admit": now - doc["admit_age_s"],
+                    "u": [
+                        arrays[f"pp{i}_u{layer}"]
+                        for layer in range(n_layers)
+                    ],
+                    "refrac": [
+                        arrays[f"pp{i}_refrac{layer}"]
+                        for layer in range(n_layers)
+                    ],
+                    "ring_addrs": arrays[f"pp{i}_ring_addrs"],
+                    "ring_values": arrays[f"pp{i}_ring_values"],
+                    "ring_counts": arrays[f"pp{i}_ring_counts"],
+                    "counts": arrays[f"pp{i}_counts"],
+                    "memsum": arrays[f"pp{i}_memsum"],
+                    "events": arrays[f"pp{i}_events"],
+                })
+        except KeyError as e:
+            raise CheckpointCorruptError(
+                f"array {e} missing from snapshot {path}"
+            ) from e
+        self._pending_results = [
+            _undoc_result(d) for d in manifest["pending_results"]
+        ]
+        self.fault_events = list(manifest["fault_events"])
+        self._tick_index = int(manifest["tick_index"])
+        self._seq = int(manifest["seq"])
+        self._next_rid = int(manifest["next_rid"])
+        self._snap_index = int(manifest.get("snap_index", 0))
+        self._m_qdepth.set(len(self._queue))
+        self._m_parked_depth.set(len(self._parked))
+        self._m_preempt_depth.set(len(self._preempt_parked))
+        if not self.idle():
+            self._episode_open = True
+            self._episode_t0 = now - float(
+                manifest.get("episode_age_s", 0.0)
+            )
+        t_end = time.perf_counter()
+        self._m_restore_snap_time.record(t_end - t_start)
+        self.trace.span(
+            "restore", t_start, t_end, track="engine",
+            args={"path": path, "tick": self._tick_index},
+        )
+
+    def snapshot_auto(self, directory: str, keep_n: int = 3) -> str:
+        """Write the next snapshot in a keep-N rotation under
+        ``directory`` (``snap_NNNNNN``), pruning the oldest beyond
+        ``keep_n``; orphaned ``.tmp_*`` dirs from a previously killed
+        writer are garbage-collected first."""
+        os.makedirs(directory, exist_ok=True)
+        gc_orphan_tmpdirs(directory)
+        self._snap_index += 1
+        out = self.snapshot(
+            os.path.join(directory, f"snap_{self._snap_index:06d}")
+        )
+        names = sorted(
+            d for d in os.listdir(directory) if d.startswith("snap_")
+        )
+        for d in names[:-keep_n] if keep_n else []:
+            shutil.rmtree(
+                os.path.join(directory, d), ignore_errors=True
+            )
+        return out
+
+    def restore_latest_snapshot(self, directory: str) -> Optional[str]:
+        """Restore the newest snapshot under ``directory`` that passes
+        integrity verification.  A corrupt snapshot (truncated npz,
+        checksum mismatch) is skipped with a loud warning and the
+        ``engine.faults.checkpoint_fallback`` counter, falling back to
+        the previous one in the rotation.  Returns the restored path,
+        or None when no usable snapshot exists."""
+        if not os.path.isdir(directory):
+            return None
+        gc_orphan_tmpdirs(directory)
+        names = sorted(
+            (
+                d for d in os.listdir(directory)
+                if d.startswith("snap_")
+                and os.path.exists(
+                    os.path.join(directory, d, "manifest.json")
+                )
+            ),
+            reverse=True,
+        )
+        for name in names:
+            p = os.path.join(directory, name)
+            try:
+                self.restore(p)
+                return p
+            except CheckpointCorruptError as e:
+                self._m_ckpt_fallback.inc()
+                warnings.warn(
+                    f"engine snapshot {p} failed integrity check "
+                    f"({e}); falling back to the previous snapshot",
+                    stacklevel=2,
+                )
+        return None
+
     # ----------------------------------------------------------- serving
     def idle(self) -> bool:
-        """True when no request is queued, parked, resident in a slot,
-        awaiting stats retirement, or finished-but-undelivered."""
+        """True when no request is queued, parked (admission plane or
+        preemption buffer), resident in a slot, awaiting stats
+        retirement, or finished-but-undelivered."""
         return (
             not self._queue
             and not self._parked
+            and not self._preempt_parked
             and all(r is None for r in self._slot_req)
             and not self._inflight
             and not self._pending_results
@@ -1310,13 +2001,28 @@ class SNNStreamEngine:
     def parked_depth(self) -> int:
         return len(self._parked)
 
+    def preempt_parked_depth(self) -> int:
+        """Occupancy of the preemption parking buffer (displaced
+        mid-window slots awaiting resume)."""
+        return len(self._preempt_parked)
+
     def _fill_slot(self, s: int) -> None:
-        """Admit into free slot ``s``: pop the heap in priority/EDF
-        order, shedding (or parking) candidates the feasibility check
-        proves unmeetable, then fall back to the parked FIFO when the
-        heap empties (best-effort service, marked ``parked`` on the
-        result)."""
-        while self._queue:
+        """Admit into free slot ``s``: resume the most urgent
+        preempt-parked window when it beats (or ties) the queue head —
+        a started window wins ties, avoiding swap thrash — else pop the
+        heap in priority/EDF order, shedding (or parking) candidates
+        the feasibility check proves unmeetable, then fall back to the
+        parked FIFO when the heap empties (best-effort service, marked
+        ``parked`` on the result)."""
+        while True:
+            best = self._best_preempt_key()
+            if best is not None and (
+                not self._queue or best[0] <= self._queue[0][0][:3]
+            ):
+                self._resume_slot(s, self._preempt_parked.pop(best[1]))
+                return
+            if not self._queue:
+                break
             _, rid, req, t_sub, dl = heapq.heappop(self._queue)
             verdict, reason = self._admission_verdict(req, dl)
             if verdict == shed_mod.ADMIT:
@@ -1339,9 +2045,10 @@ class SNNStreamEngine:
         return the requests that finished — including shed and
         quarantined dispositions.  Non-blocking in the scheduling sense:
         returns [] when the engine is idle."""
+        self._maybe_preempt()
         for s in range(self.S):
             if self._slot_req[s] is None and (
-                self._queue or self._parked
+                self._queue or self._parked or self._preempt_parked
             ):
                 self._fill_slot(s)
         self._m_qdepth.set(len(self._queue))
@@ -1397,6 +2104,7 @@ class SNNStreamEngine:
                     f"drain() timed out after {timeout_s}s with the "
                     f"engine not idle: queue={snap['queue_depth']} "
                     f"parked={snap['parked_depth']} "
+                    f"preempt_parked={snap['preempt_parked_depth']} "
                     f"inflight={snap['inflight']} "
                     f"stuck_slots={stuck}",
                     snap,
@@ -1407,12 +2115,26 @@ class SNNStreamEngine:
     def stall_snapshot(self) -> Dict:
         """Diagnostic view of everything that could be blocking
         progress: per-slot occupancy (request id, steps dispatched /
-        retired / total, deadline), queue and parked depths, in-flight
-        stats chunks, and the tick index."""
+        retired / total, deadline), queue and parked depths *with*
+        the parked request ids and the preemption parking-buffer
+        occupancy (a drain timeout after heavy preemption is otherwise
+        undiagnosable), in-flight stats chunks, and the tick index."""
         return {
             "tick": self._tick_index,
             "queue_depth": len(self._queue),
             "parked_depth": len(self._parked),
+            "parked_rids": [rid for rid, _, _, _ in self._parked],
+            "preempt_parked_depth": len(self._preempt_parked),
+            "preempt_parked": [
+                {
+                    "rid": rec["rid"],
+                    "priority": rec["priority"],
+                    "done": rec["done"],
+                    "total": rec["total"],
+                    "deadline_s": rec["rel_deadline"],
+                }
+                for rec in self._preempt_parked
+            ],
             "inflight": len(self._inflight),
             "pending_results": len(self._pending_results),
             "backend": self._backend_active,

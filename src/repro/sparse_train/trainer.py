@@ -191,6 +191,15 @@ class EventTrainer(loop.Trainer):
             "train.events_per_inference", lo=1.0, hi=1e9
         )
 
+    def _checkpoint_metric_names(self):
+        """Persist the energy-regularizer telemetry next to the
+        substrate counters: a resumed run's spike/energy trajectory
+        continues instead of restarting from zero."""
+        return super()._checkpoint_metric_names() + [
+            f"train.events.l{i}.total"
+            for i in range(self.snn_cfg.num_layers)
+        ] + ["train.energy_pj.total"]
+
     def _record_window_metrics(self, metrics, window_steps, dt):
         """Substrate instruments plus the event-driven workload's
         spike/energy telemetry.
@@ -240,16 +249,27 @@ class EventTrainer(loop.Trainer):
 
 
 def dvs_batches(
-    seed: int, batch_size: int, tcfg: EventTrainConfig
+    seed: int,
+    batch_size: int,
+    tcfg: EventTrainConfig,
+    start_step: int = 0,
 ) -> Iterator[Dict[str, Array]]:
     """Endless stream of freshly-rendered DVS collision batches.
 
     Each batch renders ``batch_size`` synthetic recordings, AER-encodes
     their brightness changes, and maps ON/OFF polarities onto the input
     layer per ``tcfg.polarity_mode``.
+
+    The stream's PRNG state is exactly ``(seed, step)``: ``start_step``
+    fast-forwards the key-split chain so a checkpoint-resumed run sees
+    bit-identical batches to an uninterrupted one (pass the restored
+    ``state.step`` — ``launch/train.py --resume auto`` does).
     """
     key = jax.random.PRNGKey(seed)
     step = 0
+    for _ in range(int(start_step)):
+        key, _k = jax.random.split(key)
+        step += 1
     while True:
         key, k = jax.random.split(key)
         stream, labels = aer.dvs_collision_batch(

@@ -26,6 +26,7 @@ from typing import Any, Callable, Dict, Iterator, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.models.model import Model
@@ -169,6 +170,10 @@ class Trainer:
         )
         self.ckpt_every = ckpt_every
         self.watchdog = StragglerWatchdog()
+        # the trainer-level PRNG key rides in the checkpoint payload so
+        # a restored run resumes the exact random state; init_state /
+        # restore_or_init overwrite this placeholder
+        self.rng = jax.random.PRNGKey(0)
         self._make_instruments()
 
     # ----------------------------------------------------- observability
@@ -244,17 +249,50 @@ class Trainer:
             )
 
     def init_state(self, key) -> TrainState:
+        self.rng = key
         params, _ = self.model.init(key)
         return TrainState(
             params, self.optimizer.init(params), jnp.zeros((), jnp.int32)
         )
 
+    # ------------------------------------------------- checkpoint payload
+    def _checkpoint_metric_names(self):
+        """Lifetime counters persisted in the checkpoint payload so a
+        restored run continues its accounting instead of restarting
+        from zero (subclasses extend — ``EventTrainer`` adds the
+        energy-regularizer telemetry)."""
+        return ["train.steps", "train.windows", "train.straggler_warnings"]
+
+    def _ckpt_tree(self, state: TrainState) -> Dict:
+        """The full-state checkpoint payload: model params + optimizer
+        state + step (``state``), the trainer PRNG key, and the
+        persisted lifetime counters.  One pytree, so the checkpoint
+        manager's atomic write + checksum verification covers the whole
+        resume state."""
+        return {
+            "state": state,
+            "rng": self.rng,
+            "metrics": {
+                name: np.float64(self.metrics.counter(name).value)
+                for name in self._checkpoint_metric_names()
+            },
+        }
+
     def restore_or_init(self, key) -> TrainState:
+        """Resume from the newest intact checkpoint (corrupt ones fall
+        back to the previous keep-N save — see
+        ``CheckpointManager.restore_latest``), restoring params, opt
+        state, step, PRNG key, and lifetime counters; init fresh from
+        ``key`` when no usable checkpoint exists."""
         state = self.init_state(key)
         if self.ckpt is not None:
-            step, restored = self.ckpt.restore_latest(state)
+            _, restored = self.ckpt.restore_latest(self._ckpt_tree(state))
             if restored is not None:
-                return restored
+                self.rng = restored["rng"]
+                for name, v in restored["metrics"].items():
+                    c = self.metrics.counter(name)
+                    c.inc(float(v) - c.value)
+                return restored["state"]
         return state
 
     def run(
@@ -326,8 +364,8 @@ class Trainer:
                     + f" ({dt*1e3:.0f} ms/step)"
                 )
             if self.ckpt is not None and step_no % self.ckpt_every == 0:
-                self.ckpt.save(step_no, state)
+                self.ckpt.save(step_no, self._ckpt_tree(state))
         if self.ckpt is not None:
-            self.ckpt.save(step0 + num_steps, state)
-            self.ckpt.wait()
+            self.ckpt.save(step0 + num_steps, self._ckpt_tree(state))
+            self.ckpt.close()  # join the async writer before returning
         return state, last_metrics

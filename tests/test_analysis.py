@@ -144,6 +144,31 @@ def test_rl105_donated_reuse():
     assert "RL105" in codes(src)
 
 
+def test_rl105_device_get_after_donation():
+    # the snapshot-path hazard: fetching donated device state on the
+    # host *after* the donating dispatch reads freed storage
+    src = _DONATE_PRELUDE + (
+        "def snapshot(state, x):\n"
+        "    out = step_j(state, x)\n"
+        "    host = jax.device_get(state)\n"
+        "    return out, host\n"
+    )
+    res = lint_source(src, "fixture.py")
+    assert [f.code for f in res.findings] == ["RL105"]
+    assert "device_get" in res.findings[0].message
+
+
+def test_rl105_device_get_before_donation_ok():
+    # the correct snapshot ordering: host fetch first, dispatch second
+    src = _DONATE_PRELUDE + (
+        "def snapshot(state, x):\n"
+        "    host = jax.device_get(state)\n"
+        "    out = step_j(state, x)\n"
+        "    return out, host\n"
+    )
+    assert codes(src) == []
+
+
 def test_rl105_loop_rebind_ok():
     # the engine/train-loop idiom: the loop rebinds the donated buffer
     # from the call's output each iteration, so reuse is fine

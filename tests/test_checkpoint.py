@@ -1,4 +1,5 @@
-"""Checkpoint manager: atomicity, keep-N, auto-resume, structure checks."""
+"""Checkpoint manager: atomicity, keep-N, auto-resume, structure checks,
+checksum-verified integrity with fallback, and orphan tmp-dir GC."""
 
 import os
 
@@ -7,7 +8,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import CheckpointManager
+from repro.checkpoint import (
+    CheckpointCorruptError,
+    CheckpointManager,
+    gc_orphan_tmpdirs,
+    load_array_dir,
+    publish_array_dir,
+)
+from repro.faults import corrupt_checkpoint
 
 
 def _tree(seed=0):
@@ -67,6 +75,97 @@ def test_async_save(tmp_path):
     mgr.save(7, _tree(7))
     mgr.wait()
     assert mgr.latest_step() == 7
+
+
+def test_checksum_detects_byte_corruption(tmp_path):
+    """A byte-flipped arrays.npz must surface as CheckpointCorruptError,
+    never load garbage."""
+    d = str(tmp_path / "ck")
+    publish_array_dir(
+        str(tmp_path), "ck",
+        {"a0": np.arange(64, dtype=np.float32)}, {"step": 1},
+    )
+    _, manifest = load_array_dir(d)
+    assert "checksums" in manifest
+    corrupt_checkpoint(d, nbytes=4)
+    with pytest.raises(CheckpointCorruptError):
+        load_array_dir(d)
+
+
+def test_manifest_checksum_detects_swapped_arrays(tmp_path):
+    """A structurally-valid npz with the wrong payload (torn copy, a
+    stale file restored over a new manifest) is caught by the manifest
+    crc32, not the zip container's own CRC."""
+    d = str(tmp_path / "ck")
+    publish_array_dir(
+        str(tmp_path), "ck",
+        {"a0": np.arange(64, dtype=np.float32)}, {"step": 1},
+    )
+    np.savez(
+        os.path.join(d, "arrays.npz"), a0=np.zeros(64, dtype=np.float32)
+    )
+    with pytest.raises(CheckpointCorruptError, match="checksum"):
+        load_array_dir(d)
+
+
+def test_restore_latest_falls_back_on_corruption(tmp_path):
+    """Corrupting the newest checkpoint must fall back to the previous
+    intact one — loudly, with the fallback counter bumped."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    corrupt_checkpoint(str(tmp_path))  # hits the newest (step 2)
+    with pytest.warns(UserWarning, match="fall"):
+        step, restored = mgr.restore_latest(_tree(0))
+    assert step == 1
+    assert int(restored["step"]) == 1
+    assert mgr.fallbacks == 1
+
+
+def test_restore_latest_all_corrupt_gives_cold_start(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1))
+    corrupt_checkpoint(str(tmp_path))
+    with pytest.warns(UserWarning):
+        step, restored = mgr.restore_latest(_tree(0))
+    assert step is None and restored is None
+    assert mgr.fallbacks == 1
+
+
+def test_close_joins_async_thread(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    mgr.save(5, _tree(5))
+    mgr.close()
+    assert mgr.latest_step() == 5
+    assert mgr._thread is None or not mgr._thread.is_alive()
+
+
+def test_context_manager_joins_async_thread(tmp_path):
+    with CheckpointManager(str(tmp_path), async_save=True) as mgr:
+        mgr.save(9, _tree(9))
+    assert CheckpointManager(str(tmp_path)).latest_step() == 9
+
+
+def test_orphan_tmpdir_gc(tmp_path):
+    """A crash mid-publish leaves a .tmp_* dir; latest_step() must both
+    ignore and remove it."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(1))
+    orphan = tmp_path / ".tmp_dead"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"partial")
+    with pytest.warns(UserWarning, match="orphan"):
+        assert mgr.latest_step() == 1
+    assert not orphan.exists()
+
+
+def test_gc_orphan_tmpdirs_helper(tmp_path):
+    (tmp_path / ".tmp_x").mkdir()
+    (tmp_path / "keep").mkdir()
+    removed = gc_orphan_tmpdirs(str(tmp_path))
+    assert len(removed) == 1
+    assert (tmp_path / "keep").exists()
+    assert not (tmp_path / ".tmp_x").exists()
 
 
 def test_elastic_restore_dtype_cast(tmp_path):

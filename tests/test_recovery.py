@@ -1,0 +1,497 @@
+"""Crash-safe state: engine snapshot/warm-restart parity, deadline-aware
+slot preemption, integrity-verified fallback, SIGKILL chaos, and
+full-state training resume.
+
+The bit-exactness contract under test: a warm-restarted engine (or a
+checkpoint-resumed training run) must be indistinguishable from an
+uninterrupted one — same spike counts, same events, same energy, same
+params — not merely "close"."""
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import snn
+from repro.faults import Fault, FaultInjector, FaultSchedule, corrupt_checkpoint
+from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+CFG = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=12)
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _params(seed=0):
+    return snn.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _train(rate, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((CFG.num_steps, CFG.layer_sizes[0])) < rate).astype(
+        np.float32
+    )
+
+
+def _mk(params, backend="jnp", **kw):
+    return SNNStreamEngine(
+        params, CFG, num_slots=2, chunk_steps=5, seed=0, backend=backend,
+        **kw,
+    )
+
+
+def _by_rid(results):
+    return {r.request_id: r for r in results}
+
+
+def _assert_result_equal(a, b):
+    np.testing.assert_array_equal(a.spike_counts, b.spike_counts)
+    np.testing.assert_array_equal(a.events_per_layer, b.events_per_layer)
+    assert a.prediction == b.prediction
+    assert a.energy_pj == b.energy_pj
+    assert a.steps == b.steps
+
+
+# ------------------------------------------------- snapshot / warm restart
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_snapshot_warm_restart_is_bit_exact(tmp_path, backend):
+    """Snapshot an engine with windows in flight, restore into a fresh
+    engine, finish — results must be bit-identical to an uninterrupted
+    run, for both chunk backends."""
+    params = _params()
+    trains = [_train(0.3, s) for s in range(6)]
+    oracle = _by_rid(
+        _mk(params, backend).run([StreamRequest(spikes=t) for t in trains])
+    )
+
+    eng1 = _mk(params, backend)
+    for t in trains:
+        eng1.submit(StreamRequest(spikes=t))
+    early = []
+    for _ in range(3):  # leave slots mid-window and requests queued
+        early.extend(eng1.poll())
+    assert not eng1.idle()
+    path = eng1.snapshot(str(tmp_path / "snap"))
+
+    eng2 = _mk(params, backend)
+    eng2.restore(path)
+    late = eng2.drain()
+    got = _by_rid(early + late)
+    assert sorted(got) == sorted(oracle)
+    for rid in oracle:
+        _assert_result_equal(got[rid], oracle[rid])
+
+
+def test_snapshot_preserves_queue_order_and_deadlines(tmp_path):
+    """Queued (not yet admitted) requests survive the snapshot with
+    their priority/EDF order and deadline budgets intact."""
+    params = _params()
+    eng1 = _mk(params)
+    eng1.submit(StreamRequest(spikes=_train(0.3, 0)))
+    eng1.submit(StreamRequest(spikes=_train(0.3, 1)))
+    eng1.poll()  # both admitted
+    # queue: a low-priority early submit and a high-priority later one
+    eng1.submit(StreamRequest(spikes=_train(0.3, 2), priority=0))
+    eng1.submit(StreamRequest(spikes=_train(0.3, 3), priority=5,
+                              deadline_s=30.0))
+    path = eng1.snapshot(str(tmp_path / "snap"))
+
+    eng2 = _mk(params)
+    eng2.restore(path)
+    assert eng2.queue_depth() == 2
+    results = eng2.drain()
+    got = _by_rid(results)
+    # the high-priority request (rid 3) must be admitted before rid 2,
+    # despite being submitted after it
+    assert got[3].queue_wait_s < got[2].queue_wait_s
+    assert got[3].deadline_s == pytest.approx(30.0, abs=1.0)
+    assert not got[3].deadline_missed
+
+
+def test_restore_geometry_mismatch_raises(tmp_path):
+    params = _params()
+    eng = _mk(params)
+    eng.submit(StreamRequest(spikes=_train(0.3, 0)))
+    eng.poll()
+    path = eng.snapshot(str(tmp_path / "snap"))
+    other = SNNStreamEngine(params, CFG, num_slots=3, chunk_steps=5)
+    with pytest.raises(ValueError, match="geometry"):
+        other.restore(path)
+
+
+def test_restore_rejects_non_snapshot_dir(tmp_path):
+    from repro.checkpoint import publish_array_dir
+
+    p = publish_array_dir(
+        str(tmp_path), "notasnap",
+        {"a0": np.zeros(4, np.float32)}, {"kind": "something_else"},
+    )
+    with pytest.raises(ValueError, match="not an engine snapshot"):
+        _mk(_params()).restore(p)
+
+
+def test_snapshot_auto_rotation_and_corrupt_fallback(tmp_path):
+    """The keep-N snapshot rotation falls back past a byte-corrupted
+    newest snapshot — loudly, with the fallback counter bumped — and the
+    restored engine still finishes every request correctly."""
+    params = _params()
+    trains = [_train(0.3, s) for s in range(4)]
+    oracle = _by_rid(
+        _mk(params).run([StreamRequest(spikes=t) for t in trains])
+    )
+
+    eng1 = _mk(params)
+    for t in trains:
+        eng1.submit(StreamRequest(spikes=t))
+    eng1.poll()
+    eng1.snapshot_auto(str(tmp_path))
+    eng1.poll()
+    eng1.snapshot_auto(str(tmp_path))
+    snaps = sorted(d for d in os.listdir(tmp_path) if d.startswith("snap_"))
+    assert snaps == ["snap_000001", "snap_000002"]
+
+    corrupt_checkpoint(str(tmp_path))  # hits the newest in the rotation
+    eng2 = _mk(params)
+    with pytest.warns(UserWarning, match="falling back"):
+        restored = eng2.restore_latest_snapshot(str(tmp_path))
+    assert restored is not None and restored.endswith("snap_000001")
+    snap = eng2.metrics.snapshot()
+    assert snap["engine.faults.checkpoint_fallback"]["value"] == 1
+
+    got = _by_rid(eng2.drain())
+    assert sorted(got) == sorted(oracle)
+    for rid in oracle:
+        _assert_result_equal(got[rid], oracle[rid])
+
+
+def test_snapshot_auto_keep_n_prunes(tmp_path):
+    eng = _mk(_params())
+    eng.submit(StreamRequest(spikes=_train(0.3, 0)))
+    for _ in range(5):
+        eng.poll()
+        eng.snapshot_auto(str(tmp_path), keep_n=3)
+    snaps = sorted(d for d in os.listdir(tmp_path) if d.startswith("snap_"))
+    assert len(snaps) == 3
+    assert snaps[-1] == "snap_000005"
+
+
+def test_restore_latest_snapshot_empty_dir_is_none(tmp_path):
+    eng = _mk(_params())
+    assert eng.restore_latest_snapshot(str(tmp_path / "nothere")) is None
+
+
+# ------------------------------------------------- deadline-aware preemption
+def test_preemption_parks_loosest_and_stays_bit_exact():
+    """A tighter-deadline arrival with no free slot parks the loosest
+    resident window mid-window; both the urgent and the parked-then-
+    resumed windows finish bit-identically to an unpreempted run."""
+    params = _params()
+    trains = [_train(0.3, s) for s in range(3)]
+    oracle = _by_rid(
+        _mk(params).run([StreamRequest(spikes=t) for t in trains])
+    )
+
+    eng = _mk(params, preempt=True)
+    eng.submit(StreamRequest(spikes=trains[0]))
+    eng.submit(StreamRequest(spikes=trains[1], deadline_s=1e4))
+    eng.poll()  # both slots resident, mid-window
+    eng.submit(StreamRequest(spikes=trains[2], priority=5, deadline_s=0.5))
+    eng.poll()
+    # rid 0 (no deadline, priority 0) is the loosest -> parked
+    assert eng.preempt_parked_depth() == 1
+    stall = eng.stall_snapshot()
+    assert stall["preempt_parked_depth"] == 1
+    assert stall["preempt_parked"][0]["rid"] == 0
+    assert 0 < stall["preempt_parked"][0]["done"] < CFG.num_steps
+    diag = eng.health()["diagnosis"]
+    assert "preempt_thrash" in diag and "preempt_parked_depth" in diag
+
+    got = _by_rid(eng.drain())
+    snap = eng.metrics.snapshot()
+    assert snap["engine.preempt.parked"]["value"] >= 1
+    assert snap["engine.preempt.resumed"]["value"] >= 1
+    assert snap["engine.preempt.park_s"]["count"] >= 1
+    assert snap["engine.preempt.restore_s"]["count"] >= 1
+    assert sorted(got) == sorted(oracle)
+    for rid in oracle:
+        _assert_result_equal(got[rid], oracle[rid])
+
+
+def test_no_preemption_without_flag():
+    """Default engines never park a resident window, whatever arrives."""
+    params = _params()
+    eng = _mk(params)  # preempt=False
+    eng.submit(StreamRequest(spikes=_train(0.3, 0)))
+    eng.submit(StreamRequest(spikes=_train(0.3, 1)))
+    eng.poll()
+    eng.submit(StreamRequest(spikes=_train(0.3, 2), priority=9,
+                             deadline_s=0.01))
+    eng.drain()
+    assert eng.metrics.snapshot()["engine.preempt.parked"]["value"] == 0
+
+
+def test_preemption_ties_do_not_thrash():
+    """An arrival with the same urgency as every resident slot must not
+    preempt (strictly-tighter rule): parking a window to admit an equal
+    one would swap forever."""
+    params = _params()
+    eng = _mk(params, preempt=True)
+    eng.submit(StreamRequest(spikes=_train(0.3, 0), priority=5))
+    eng.submit(StreamRequest(spikes=_train(0.3, 1), priority=5))
+    eng.poll()
+    eng.submit(StreamRequest(spikes=_train(0.3, 2), priority=5))
+    eng.drain()
+    assert eng.metrics.snapshot()["engine.preempt.parked"]["value"] == 0
+
+
+def test_preempted_state_survives_snapshot(tmp_path):
+    """A snapshot taken while a window sits in the preemption parking
+    buffer carries it across the restart."""
+    params = _params()
+    trains = [_train(0.3, s) for s in range(3)]
+    oracle = _by_rid(
+        _mk(params).run([StreamRequest(spikes=t) for t in trains])
+    )
+    eng1 = _mk(params, preempt=True)
+    eng1.submit(StreamRequest(spikes=trains[0]))
+    eng1.submit(StreamRequest(spikes=trains[1], deadline_s=1e4))
+    eng1.poll()
+    eng1.submit(StreamRequest(spikes=trains[2], priority=5, deadline_s=5.0))
+    eng1.poll()
+    assert eng1.preempt_parked_depth() == 1
+    path = eng1.snapshot(str(tmp_path / "snap"))
+
+    eng2 = _mk(params, preempt=True)
+    eng2.restore(path)
+    assert eng2.preempt_parked_depth() == 1
+    got = _by_rid(eng2.drain())
+    assert sorted(got) == sorted(oracle)
+    for rid in oracle:
+        _assert_result_equal(got[rid], oracle[rid])
+
+
+# ------------------------------------------------------- SIGKILL chaos
+_KILL_CKPT_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.checkpoint import CheckpointManager
+
+    mgr = CheckpointManager(sys.argv[1], keep_n=3)
+    step = 0
+    while True:
+        step += 1
+        mgr.save(step, {
+            "w": np.full((512, 64), float(step), np.float32),
+            "step": np.asarray(step, np.int64),
+        })
+        print(step, flush=True)
+""")
+
+
+@pytest.mark.slow
+def test_sigkill_mid_save_never_corrupts_restore_latest(tmp_path):
+    """SIGKILL a process that checkpoints in a tight loop, at staggered
+    moments; restore_latest in the survivor must always produce a
+    self-consistent tree (every leaf from the same step) without a
+    single integrity fallback — the atomic tmp-dir+rename contract."""
+    from repro.checkpoint import CheckpointManager
+
+    for trial, extra_delay in enumerate((0.0, 0.05, 0.15)):
+        d = str(tmp_path / f"trial{trial}")
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _KILL_CKPT_SCRIPT, d],
+            cwd=REPO, stdout=subprocess.PIPE, stderr=subprocess.DEVNULL,
+        )
+        try:
+            proc.stdout.readline()  # first save landed
+            time.sleep(extra_delay)
+        finally:
+            proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=60)
+        assert proc.returncode == -signal.SIGKILL
+
+        mgr = CheckpointManager(d)
+        like = {
+            "w": np.zeros((512, 64), np.float32),
+            "step": np.asarray(0, np.int64),
+        }
+        step, tree = mgr.restore_latest(like)
+        assert step is not None, "at least one save was published"
+        assert mgr.fallbacks == 0, "published checkpoints must be intact"
+        np.testing.assert_array_equal(
+            tree["w"], np.full((512, 64), float(step), np.float32)
+        )
+        assert int(tree["step"]) == step
+        # any orphaned .tmp_* partial save was GC'd by restore_latest
+        assert not [
+            f for f in os.listdir(d) if f.startswith(".tmp_")
+        ]
+
+
+_KILL_ENGINE_SCRIPT = textwrap.dedent("""
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from repro.core import snn
+    from repro.faults import Fault, FaultInjector, FaultSchedule
+    from repro.serving.snn_engine import SNNStreamEngine, StreamRequest
+
+    snap_dir = sys.argv[1]
+    cfg = snn.SNNConfig(layer_sizes=(64, 24, 2), num_steps=12)
+    params = snn.init_params(jax.random.PRNGKey(0), cfg)
+    # kill at tick 2: every window is still mid-flight (nothing has been
+    # delivered to the doomed client), so the last snapshot carries the
+    # complete outstanding set
+    injector = FaultInjector(FaultSchedule(
+        faults=(Fault(tick=2, kind="process_kill"),)
+    ))
+    eng = SNNStreamEngine(
+        params, cfg, num_slots=2, chunk_steps=5, seed=0, backend="jnp",
+        injector=injector,
+    )
+    for s in range(4):
+        r = np.random.default_rng(s)
+        eng.submit(StreamRequest(spikes=(
+            r.random((12, 64)) < 0.3).astype(np.float32)))
+    while not eng.idle():
+        eng.snapshot_auto(snap_dir)   # snapshot BEFORE the tick: the
+        eng.poll()                    # kill at tick 3 loses nothing
+    print("ENGINE_FINISHED_WITHOUT_KILL", flush=True)
+""")
+
+
+@pytest.mark.slow
+def test_process_kill_then_warm_restart_parity(tmp_path):
+    """End-to-end kill-and-resume: a serving process SIGKILLs itself
+    mid-run via the process_kill fault; the survivor warm-restarts from
+    the snapshot rotation and finishes all four windows bit-identically
+    to a run that was never killed.  (Results already delivered to the
+    dead client are gone by design — the kill tick is chosen before the
+    first completion, so recovery must reproduce all four.)"""
+    snap_dir = str(tmp_path / "snaps")
+    proc = subprocess.run(
+        [sys.executable, "-c", _KILL_ENGINE_SCRIPT, snap_dir],
+        cwd=REPO, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    assert "ENGINE_FINISHED_WITHOUT_KILL" not in proc.stdout
+
+    params = _params()
+    trains = [_train(0.3, s) for s in range(4)]
+    oracle = _by_rid(
+        _mk(params).run([StreamRequest(spikes=t) for t in trains])
+    )
+    eng = _mk(params)
+    restored = eng.restore_latest_snapshot(snap_dir)
+    assert restored is not None
+    got = _by_rid(eng.drain())
+    assert sorted(got) == sorted(oracle)
+    for rid in oracle:
+        _assert_result_equal(got[rid], oracle[rid])
+
+
+def test_process_kill_fault_kind_validates():
+    """The new fault kinds are schedulable records like any other."""
+    f = Fault(tick=2, kind="process_kill")
+    assert f in FaultSchedule(faults=(f,)).faults
+    with pytest.raises(ValueError, match="needs path"):
+        FaultInjector(FaultSchedule(
+            faults=(Fault(tick=0, kind="corrupt_checkpoint"),)
+        )).begin_tick(None, 0)
+
+
+def test_corrupt_checkpoint_fault_carries_forward_until_save(tmp_path):
+    """A corrupt_checkpoint fault scheduled before any save exists is
+    carried forward, then fires on the first published save."""
+    inj = FaultInjector(FaultSchedule(faults=(
+        Fault(tick=0, kind="corrupt_checkpoint", path=str(tmp_path)),
+    )))
+    assert inj.begin_tick(None, 0) == []          # nothing to corrupt yet
+    assert len(inj._pending) == 1
+    from repro.checkpoint import publish_array_dir
+
+    publish_array_dir(
+        str(tmp_path), "snap_000001",
+        {"a0": np.arange(32, dtype=np.float32)}, {"kind": "x"},
+    )
+    applied = inj.begin_tick(None, 1)
+    assert applied and applied[0]["kind"] == "corrupt_checkpoint"
+    assert applied[0]["path"].endswith("arrays.npz")
+
+
+# ------------------------------------------------- training full-state resume
+@pytest.mark.slow
+def test_train_resume_is_bit_exact(tmp_path):
+    """train(6) == train(3) / kill / restore / train(3): params, opt
+    state, PRNG stream, step counter and telemetry counters all resume
+    exactly (ckpt_every=3, data stream fast-forwarded via start_step)."""
+    from repro.sparse_train import trainer as ev
+
+    tcfg = ev.EventTrainConfig(image_hw=16, num_steps=6, hidden=16)
+
+    def make(ckpt_dir, every):
+        return ev.EventTrainer(
+            tcfg, energy_lambda=0.01, ckpt_dir=ckpt_dir, ckpt_every=every,
+            seed=0,
+        )
+
+    # uninterrupted reference: 6 steps straight through
+    t_ref = make(str(tmp_path / "ref"), 100)
+    s_ref = t_ref.init_state(jax.random.PRNGKey(0))
+    s_ref, _ = t_ref.run(s_ref, ev.dvs_batches(0, 4, tcfg), 6)
+
+    # interrupted: 3 steps, then a fresh trainer restores and finishes
+    d = str(tmp_path / "resume")
+    t1 = make(d, 3)
+    s1 = t1.init_state(jax.random.PRNGKey(0))
+    s1, _ = t1.run(s1, ev.dvs_batches(0, 4, tcfg), 3)
+    steps_after_3 = t1.metrics.counter("train.steps").value
+
+    t2 = make(d, 3)  # simulated restart: no shared python state
+    s2 = t2.restore_or_init(jax.random.PRNGKey(1))  # key unused on restore
+    assert int(s2.step) == 3
+    assert t2.metrics.counter("train.steps").value == steps_after_3
+    assert t2.metrics.counter("train.energy_pj.total").value == pytest.approx(
+        t1.metrics.counter("train.energy_pj.total").value
+    )
+    s2, _ = t2.run(
+        s2, ev.dvs_batches(0, 4, tcfg, start_step=int(s2.step)), 3
+    )
+
+    assert int(s_ref.step) == int(s2.step) == 6
+    ref_leaves = jax.tree_util.tree_leaves(s_ref.params)
+    got_leaves = jax.tree_util.tree_leaves(s2.params)
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(s_ref.opt_state),
+        jax.tree_util.tree_leaves(s2.opt_state),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_resume_falls_back_past_corrupt_checkpoint(tmp_path):
+    """Byte-corrupting the newest training checkpoint degrades the
+    recovery point (previous keep-N save) instead of crashing resume."""
+    from repro.sparse_train import trainer as ev
+
+    tcfg = ev.EventTrainConfig(image_hw=16, num_steps=6, hidden=16)
+    d = str(tmp_path / "ck")
+    t1 = ev.EventTrainer(tcfg, ckpt_dir=d, ckpt_every=2, seed=0)
+    s1 = t1.init_state(jax.random.PRNGKey(0))
+    t1.run(s1, ev.dvs_batches(0, 4, tcfg), 4)
+    assert t1.ckpt.all_steps() == [2, 4]
+
+    corrupt_checkpoint(d)  # newest (step 4)
+    t2 = ev.EventTrainer(tcfg, ckpt_dir=d, ckpt_every=2, seed=0)
+    with pytest.warns(UserWarning, match="falling back"):
+        s2 = t2.restore_or_init(jax.random.PRNGKey(1))
+    assert int(s2.step) == 2
+    assert t2.ckpt.fallbacks == 1
